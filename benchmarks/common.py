@@ -1,0 +1,102 @@
+"""Shared benchmark context: datasets + indexes built once, reused by every
+figure/table benchmark (QPS-recall, selectivity, ablations, distance
+computations, indexing time)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import JAGConfig, JAGIndex
+from repro.core import baselines as BL
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.recall import recall_at_k
+from repro.data import synthetic as SYN
+
+# benchmark scale: CPU-feasible analogue of the paper's 1M-10M datasets
+N = 10_000
+D = 48
+B = 192
+JCFG = JAGConfig(degree=28, ls_build=56, batch_size=256, cand_pool=128,
+                 threshold_quantiles=(1.0, 0.01, 0.0))
+
+DATASETS = {
+    "msturing_range":  lambda: SYN.msturing_range(n=N, d=D, b=B, seed=1),
+    "msturing_subset": lambda: SYN.msturing_subset(n=N, d=D, b=B, seed=2),
+    "msturing_bool":   lambda: SYN.msturing_bool(n=N, d=D, b=96, seed=3),
+    "sift_label":      lambda: SYN.sift_like(n=N, d=D, b=B, seed=4),
+    "laion_subset":    lambda: SYN.laion_like(n=N, d=D, b=B, seed=5),
+}
+
+
+@dataclasses.dataclass
+class Ctx:
+    ds: SYN.FilteredDataset
+    jag: JAGIndex
+    unf: JAGIndex
+    rw: BL.RWalksIndex
+    gt: "GroundTruth"
+    build_times: Dict[str, float]
+
+
+_CACHE: Dict[str, Ctx] = {}
+
+
+def get_ctx(name: str) -> Ctx:
+    if name in _CACHE:
+        return _CACHE[name]
+    ds = DATASETS[name]()
+    bt = {}
+    t0 = time.time()
+    jag = JAGIndex.build(ds.xb, ds.attr, JCFG)
+    bt["jag"] = time.time() - t0
+    t0 = time.time()
+    unf = BL.build_unfiltered(ds.xb, ds.attr, JCFG)
+    bt["unfiltered(post/acorn/binary)"] = time.time() - t0
+    t0 = time.time()
+    rw = BL.build_rwalks(ds.xb, ds.attr, JCFG, index=unf)
+    bt["rwalks(diffusion only)"] = time.time() - t0
+    gt = exact_filtered_knn(jnp.asarray(ds.xb), ds.attr,
+                            jnp.asarray(ds.queries), ds.filt, k=10)
+    jax.block_until_ready(gt.ids)
+    _CACHE[name] = Ctx(ds, jag, unf, rw, gt, bt)
+    return _CACHE[name]
+
+
+ALGOS = ("jag", "post", "binary", "acorn", "rwalks")
+
+
+def run_algo(ctx: Ctx, algo: str, ls: int, k: int = 10):
+    ds = ctx.ds
+    if algo == "jag":
+        return ctx.jag.search(ds.queries, ds.filt, k=k, ls=ls)
+    if algo == "post":
+        return BL.post_filter_search(ctx.unf, ds.queries, ds.filt, k=k,
+                                     ls=ls)
+    if algo == "binary":
+        return BL.binary_search(ctx.unf, ds.queries, ds.filt, k=k, ls=ls)
+    if algo == "acorn":
+        return BL.acorn_search(ctx.unf, ds.queries, ds.filt, k=k, ls=ls)
+    if algo == "rwalks":
+        return BL.rwalks_search(ctx.rw, ds.queries, ds.filt, k=k, ls=ls)
+    raise ValueError(algo)
+
+
+def measure(ctx: Ctx, algo: str, ls: int, k: int = 10, repeats: int = 2):
+    """(recall, qps, mean distance computations, us/query)."""
+    res = run_algo(ctx, algo, ls, k)            # warm + compile
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = run_algo(ctx, algo, ls, k)
+        jax.block_until_ready(res.ids)
+    dt = (time.perf_counter() - t0) / repeats
+    B = ctx.ds.queries.shape[0]
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                      np.asarray(ctx.gt.ids)).mean()
+    nd = float(np.asarray(res.n_dist).mean())
+    return float(rec), B / dt, nd, dt / B * 1e6

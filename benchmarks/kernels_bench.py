@@ -1,0 +1,70 @@
+"""Kernel-path microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only), so wall-times here measure the jnp oracle paths the system actually
+executes on CPU; the kernels' target-hardware behaviour is captured by the
+dry-run roofline instead. Derived column reports achieved GFLOP/s of the
+oracle path + the kernel's VMEM tile plan.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *a, repeats=5):
+    out = f(*a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench_l2dist(emit):
+    B, N, d = 256, 8192, 128
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    xb = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    f = jax.jit(ref.l2dist_ref)
+    dt = _time(f, q, xb)
+    gf = 2 * B * N * d / dt / 1e9
+    emit("kernels/l2dist_oracle_256x8192x128", dt * 1e6,
+         f"gflops={gf:.1f} tile=(128,256,128)VMEM")
+    out_k = ops.l2dist(q[:8], xb[:256], interpret=True)
+    out_r = ref.l2dist_ref(q[:8], xb[:256])
+    emit("kernels/l2dist_interpret_allclose", 0.0,
+         f"maxerr={float(jnp.max(jnp.abs(out_k - out_r))):.2e}")
+
+
+def bench_gather_dist(emit):
+    N, d, B, C = 16384, 64, 128, 32
+    rng = np.random.default_rng(1)
+    xb = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, N, (B, C)), jnp.int32)
+    f = jax.jit(ref.gather_dist_ref)
+    dt = _time(f, xb, ids, q)
+    emit("kernels/gather_dist_oracle_128x32", dt * 1e6,
+         f"gflops={2 * B * C * d / dt / 1e9:.1f} rows_dma={B * C}")
+
+
+def bench_bitset(emit):
+    B, Nn, W = 256, 8192, 4
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (B, W), dtype=np.uint64),
+                    jnp.uint32)
+    bb = jnp.asarray(rng.integers(0, 2 ** 32, (Nn, W), dtype=np.uint64),
+                     jnp.uint32)
+    f = jax.jit(ref.hamming_ref)
+    dt = _time(f, a, bb)
+    emit("kernels/bitset_hamming_oracle_256x8192x4w", dt * 1e6,
+         f"gops={B * Nn * W / dt / 1e9:.2f}")
+
+
+ALL = [bench_l2dist, bench_gather_dist, bench_bitset]

@@ -1,0 +1,167 @@
+"""Paper-figure benchmarks (CSV rows via run.py):
+
+  fig1_3_4_5 : QPS vs recall per (dataset x algorithm x beam)  — the main
+               comparison plots, incl. MSTuring-range (Fig. 1), labels
+               (Fig. 3), subsets (Fig. 4), boolean (Fig. 5).
+  fig8       : max recall per selectivity bucket at a fixed compute budget.
+  fig9       : single-threshold vs merged-threshold ablation.
+  fig7       : scaling with dataset size (1x / 2x / 4x).
+  fig6       : filter-vector correlation (positive / random / negative).
+  table1     : pre-filtering QPS + distance computations.
+  table3     : indexing time per algorithm.
+  fig10_13   : distance computations vs recall (n_dist counters).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import JAGConfig, JAGIndex
+from repro.core import baselines as BL
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.recall import recall_at_k
+from repro.data import synthetic as SYN
+
+from .common import ALGOS, JCFG, get_ctx, measure
+
+BEAMS = (24, 48, 96, 160)
+
+
+def fig1_3_4_5(emit):
+    for name in ("msturing_range", "sift_label", "msturing_subset",
+                 "laion_subset", "msturing_bool"):
+        ctx = get_ctx(name)
+        for algo in ALGOS:
+            for ls in BEAMS:
+                rec, qps, nd, us = measure(ctx, algo, ls)
+                emit(f"qps_recall/{name}/{algo}/ls{ls}", us,
+                     f"recall={rec:.4f} qps={qps:.0f} ndist={nd:.0f}")
+
+
+def table1_prefilter(emit):
+    for name in ("msturing_range", "msturing_subset"):
+        ctx = get_ctx(name)
+        t0 = time.perf_counter()
+        gt = exact_filtered_knn(jnp.asarray(ctx.ds.xb), ctx.ds.attr,
+                                jnp.asarray(ctx.ds.queries), ctx.ds.filt,
+                                k=10)
+        jax.block_until_ready(gt.ids)
+        dt = time.perf_counter() - t0
+        B = ctx.ds.queries.shape[0]
+        emit(f"table1/pre_filter/{name}", dt / B * 1e6,
+             f"recall=1.0 qps={B / dt:.0f} "
+             f"ndist={float(np.asarray(gt.n_dist).mean()):.0f}")
+
+
+def fig8_selectivity(emit):
+    """Recall per selectivity decade at fixed beam (compute budget)."""
+    ctx = get_ctx("msturing_range")
+    sel = np.asarray(ctx.ds.selectivity)
+    buckets = [(1e-5, 1e-4), (1e-4, 1e-3), (1e-3, 1e-2), (1e-2, 1e-1),
+               (1e-1, 1.1)]
+    for algo in ALGOS:
+        res = None
+        from .common import run_algo
+        res = run_algo(ctx, algo, ls=64)
+        pq = recall_at_k(np.asarray(res.ids),
+                         np.asarray(res.primary) == 0,
+                         np.asarray(ctx.gt.ids))
+        for lo, hi in buckets:
+            m = (sel >= lo) & (sel < hi)
+            if m.sum() == 0:
+                continue
+            emit(f"fig8/{algo}/sel[{lo:.0e},{hi:.0e})", 0.0,
+                 f"recall={pq[m].mean():.4f} n={int(m.sum())}")
+
+
+def fig9_threshold_ablation(emit):
+    """Single thresholds vs the merged set (paper Fig. 9 upper)."""
+    import dataclasses
+    ds = SYN.msturing_range(n=6000, d=48, b=160, seed=11)
+    gt = exact_filtered_knn(jnp.asarray(ds.xb), ds.attr,
+                            jnp.asarray(ds.queries), ds.filt, k=10)
+    sel = np.asarray(ds.selectivity)
+    variants = {"t100": (1.0,), "t1": (0.01,), "t0": (0.0,),
+                "merged": (1.0, 0.01, 0.0)}
+    buckets = [(0, 1e-3), (1e-3, 1e-2), (1e-2, 1e-1), (1e-1, 1.1)]
+    for vname, quants in variants.items():
+        cfg = dataclasses.replace(JCFG, threshold_quantiles=quants)
+        idx = JAGIndex.build(ds.xb, ds.attr, cfg)
+        res = idx.search(ds.queries, ds.filt, k=10, ls=64)
+        pq = recall_at_k(np.asarray(res.ids),
+                        np.asarray(res.primary) == 0, np.asarray(gt.ids))
+        for lo, hi in buckets:
+            m = (sel >= lo) & (sel < hi)
+            if m.sum():
+                emit(f"fig9/{vname}/sel[{lo:.0e},{hi:.0e})", 0.0,
+                     f"recall={pq[m].mean():.4f} n={int(m.sum())}")
+        emit(f"fig9/{vname}/overall", 0.0, f"recall={pq.mean():.4f}")
+
+
+def fig7_scaling(emit):
+    """QPS & recall as N grows (paper Fig. 7)."""
+    for n in (2500, 5000, 10000):
+        ds = SYN.laion_like(n=n, d=48, b=128, seed=7)
+        gt = exact_filtered_knn(jnp.asarray(ds.xb), ds.attr,
+                                jnp.asarray(ds.queries), ds.filt, k=10)
+        jag = JAGIndex.build(ds.xb, ds.attr, JCFG)
+        unf = BL.build_unfiltered(ds.xb, ds.attr, JCFG)
+        for algo, run in (("jag", lambda: jag.search(ds.queries, ds.filt,
+                                                     k=10, ls=64)),
+                          ("post", lambda: BL.post_filter_search(
+                              unf, ds.queries, ds.filt, k=10, ls=64))):
+            res = run()
+            jax.block_until_ready(res.ids)
+            t0 = time.perf_counter()
+            res = run()
+            jax.block_until_ready(res.ids)
+            dt = time.perf_counter() - t0
+            rec = recall_at_k(np.asarray(res.ids),
+                              np.asarray(res.primary) == 0,
+                              np.asarray(gt.ids)).mean()
+            emit(f"fig7/{algo}/n{n}", dt / 128 * 1e6,
+                 f"recall={rec:.4f} qps={128 / dt:.0f}")
+
+
+def fig6_correlation(emit):
+    for corr in ("positive", "random", "negative"):
+        ds = SYN.laion_like(n=8000, d=48, b=128, correlation=corr, seed=8)
+        gt = exact_filtered_knn(jnp.asarray(ds.xb), ds.attr,
+                                jnp.asarray(ds.queries), ds.filt, k=10)
+        jag = JAGIndex.build(ds.xb, ds.attr, JCFG)
+        unf = BL.build_unfiltered(ds.xb, ds.attr, JCFG)
+        for algo, run in (("jag", lambda: jag.search(ds.queries, ds.filt,
+                                                     k=10, ls=64)),
+                          ("post", lambda: BL.post_filter_search(
+                              unf, ds.queries, ds.filt, k=10, ls=64))):
+            res = run()
+            rec = recall_at_k(np.asarray(res.ids),
+                              np.asarray(res.primary) == 0,
+                              np.asarray(gt.ids)).mean()
+            emit(f"fig6/{corr}/{algo}", 0.0, f"recall={rec:.4f}")
+
+
+def table3_indexing_time(emit):
+    for name in ("msturing_range", "msturing_subset"):
+        ctx = get_ctx(name)
+        for algo, t in ctx.build_times.items():
+            emit(f"table3/{name}/{algo}", t * 1e6, f"seconds={t:.1f}")
+
+
+def fig10_13_dist_comps(emit):
+    """Distance computations vs recall (the hardware-neutral cost metric)."""
+    for name in ("msturing_range", "msturing_subset"):
+        ctx = get_ctx(name)
+        for algo in ALGOS:
+            for ls in (24, 96):
+                rec, qps, nd, us = measure(ctx, algo, ls, repeats=1)
+                emit(f"dist_comps/{name}/{algo}/ls{ls}", us,
+                     f"recall={rec:.4f} ndist={nd:.0f}")
+
+
+ALL = [fig1_3_4_5, table1_prefilter, fig8_selectivity,
+       fig9_threshold_ablation, fig7_scaling, fig6_correlation,
+       table3_indexing_time, fig10_13_dist_comps]

@@ -1,0 +1,51 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Scale knobs via env:
+  REPRO_BENCH_FAST=1  -> kernel microbenches only (CI mode; skips the
+                         index-build figure benchmarks).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run benchmarks whose name contains this")
+    args = ap.parse_args(argv)
+
+    from . import kernels_bench, paper_figs
+    benches = list(kernels_bench.ALL)
+    if os.environ.get("REPRO_BENCH_FAST") != "1":
+        benches += list(paper_figs.ALL)
+
+    rows = []
+
+    def emit(name, us, derived=""):
+        row = f"{name},{us:.1f},{derived}"
+        rows.append(row)
+        print(row, flush=True)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            bench(emit)
+        except Exception:
+            traceback.print_exc()
+            emit(f"{bench.__name__}/ERROR", 0.0, "see stderr")
+    print(f"# total {time.time() - t0:.0f}s, {len(rows)} rows",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

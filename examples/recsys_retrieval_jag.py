@@ -1,0 +1,82 @@
+"""The paper's technique inside the recsys serving path (retrieval_cand):
+
+candidate generation for a two-stage recommender = *filtered* nearest
+neighbor search over item embeddings (filter = item category / price band),
+served from a JAG index instead of brute-force scanning 10^6 candidates;
+the DeepFM tower then scores the survivors.
+
+  PYTHONPATH=src python examples/recsys_retrieval_jag.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (JAGConfig, JAGIndex, label_table, label_filters)
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.recall import recall_at_k
+from repro.models import recsys as R
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_items, d = 20_000, 16
+    n_cats = 20
+
+    # item tower embeddings + a category attribute per item
+    items = rng.normal(size=(n_items, d)).astype(np.float32)
+    cats = rng.integers(0, n_cats, n_items)
+
+    print(f"building JAG over {n_items} item embeddings "
+          f"(label attribute = category)...")
+    t0 = time.time()
+    index = JAGIndex.build(items, label_table(cats),
+                           JAGConfig(degree=24, ls_build=48, batch_size=512))
+    print(f"  built in {time.time() - t0:.0f}s")
+
+    # user queries restricted to one category (the filter)
+    b = 64
+    users = rng.normal(size=(b, d)).astype(np.float32)
+    want = rng.integers(0, n_cats, b)
+    filt = label_filters(want)
+
+    # stage 1a: JAG filtered candidate generation
+    res = index.search(users, filt, k=50, ls=128)
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    res = index.search(users, filt, k=50, ls=128)
+    jax.block_until_ready(res.ids)
+    jag_dt = time.perf_counter() - t0
+
+    # stage 1b: brute-force reference (what retrieval_cand does w/o JAG)
+    t0 = time.perf_counter()
+    gt = exact_filtered_knn(jnp.asarray(items), index.attr,
+                            jnp.asarray(users), filt, k=50)
+    jax.block_until_ready(gt.ids)
+    bf_dt = time.perf_counter() - t0
+
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                      np.asarray(gt.ids)).mean()
+    print(f"candidate recall@50 = {rec:.3f}; "
+          f"JAG {b / jag_dt:.0f} qps vs brute-force {b / bf_dt:.0f} qps "
+          f"({bf_dt / jag_dt:.1f}x)")
+
+    # stage 2: score survivors with a (reduced) DeepFM tower
+    cfg = R.RecsysConfig(kind="deepfm", n_sparse=4, embed_dim=8,
+                         total_vocab=4096, mlp_dims=(32, 16), n_dense=4)
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
+    cand = np.maximum(np.asarray(res.ids), 0)
+    batch = {"sparse_ids": jnp.asarray(
+        rng.integers(0, 64, (b * 50, 4)), jnp.int32),
+        "dense": jnp.asarray(rng.normal(size=(b * 50, 4)), jnp.float32),
+        "label": jnp.zeros(b * 50)}
+    scores = jax.jit(lambda p, bt: R.forward(cfg, p, bt))(params, batch)
+    scores = np.asarray(scores).reshape(b, 50)
+    best = np.take_along_axis(cand, np.argmax(scores, 1)[:, None], 1)
+    print(f"stage-2 ranked; example user 0 -> item {int(best[0, 0])} "
+          f"(category {cats[best[0, 0]]}, wanted {want[0]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Train a ~100M-param LM (qwen3-shaped) for a few hundred steps on CPU —
+the end-to-end training driver deliverable. Thin wrapper over the
+fault-tolerant launcher (checkpoints, auto-resume, straggler logging):
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    args = ap.parse_args()
+    sys.exit(train_main([
+        "--arch", args.arch, "--scale", "tiny",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--ckpt-dir", "/tmp/repro_train_lm",
+        "--metrics-out", "/tmp/repro_train_lm/metrics.jsonl",
+    ]))

@@ -1,0 +1,2 @@
+from .checkpoint import (CheckpointManager, save_pytree, load_pytree,
+                         latest_step)

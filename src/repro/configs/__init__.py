@@ -1,0 +1,2 @@
+"""Architecture configs (--arch <id>). All from public literature."""
+from .registry import ArchSpec, all_archs, get, make_cell

@@ -1,0 +1,431 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each arch module defines an ``ArchSpec``; the registry provides the
+family-generic machinery the launcher/dry-run needs:
+
+  make_model_cfg(arch, shape)   -> family config for that cell
+  abstract_inputs(arch, shape)  -> ShapeDtypeStruct pytrees (no allocation)
+  make_step(arch, shape, mesh)  -> (fn, in_shardings, donate) ready to lower
+
+All configs come from public literature; see the per-arch module docstrings
+for sources.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import Rules, make_rules, resolve_spec, use_rules
+from .shapes import GNN_SHAPES, JAG_SHAPES, LM_SHAPES, RECSYS_SHAPES
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    id: str
+    family: str                      # lm | gnn | recsys | jag
+    make_config: Callable[..., Any]  # (shape_name=None) -> config
+    make_reduced: Callable[[], Any]  # smoke-test config
+    notes: str = ""
+
+    @property
+    def shapes(self):
+        return {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                "recsys": RECSYS_SHAPES, "jag": JAG_SHAPES}[self.family]
+
+
+_ARCH_MODULES = [
+    "llama4_maverick_400b_a17b", "llama4_scout_17b_a16e", "minicpm_2b",
+    "gemma_7b", "qwen3_1_7b", "gcn_cora", "deepfm", "din", "fm",
+    "wide_deep", "jag_billion",
+]
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def get(arch_id: str) -> ArchSpec:
+    if not _REGISTRY:
+        for m in _ARCH_MODULES:
+            mod = importlib.import_module(f"repro.configs.{m}")
+            _REGISTRY[mod.SPEC.id] = mod.SPEC
+    return _REGISTRY[arch_id]
+
+
+def all_archs():
+    get("gcn-cora")  # force registry load
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs + step builders per family
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shardings_for(tree_specs, tree_abstract, rules: Rules):
+    def one(spec, arr):
+        return NamedSharding(rules.mesh, resolve_spec(spec, arr.shape,
+                                                      rules))
+    return jax.tree.map(
+        one, tree_specs, tree_abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def make_cell(arch_id: str, shape_name: str, mesh, *,
+              opt_cfg=None, lowering: str = "unroll",
+              rule_overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    """Everything needed to lower one (arch x shape x mesh) cell:
+    {fn, args (abstract), in_shardings, out_shardings, donate_argnums,
+    model_flops, params_bytes}.
+
+    ``lowering``: "unroll" = straight-line layers (exact cost_analysis;
+    XLA HloCostAnalysis counts loop bodies once) | "scan" = production
+    compact HLO (remat-aware memory_analysis). The dry-run compiles LM
+    train/prefill cells both ways: compute/collective stats from the
+    unrolled artifact, the HBM-fit proof from the scan artifact.
+    """
+    spec = get(arch_id)
+    shp = spec.shapes[shape_name]
+    rules = make_rules(mesh, rule_overrides)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape_name, shp, mesh, rules, opt_cfg,
+                        lowering)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape_name, shp, mesh, rules, opt_cfg)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape_name, shp, mesh, rules, opt_cfg)
+    if spec.family == "jag":
+        return _jag_cell(spec, shape_name, shp, mesh, rules)
+    raise ValueError(spec.family)
+
+
+def _default_opt():
+    from ..train.optimizer import OptConfig
+    return OptConfig()
+
+
+# --- LM ---------------------------------------------------------------------
+
+def _lm_cell(spec, shape_name, shp, mesh, rules, opt_cfg,
+             lowering: str = "unroll"):
+    from ..models import transformer as T
+    from ..train.optimizer import AdamWState, init_state
+    from ..train.steps import make_train_step
+    cfg = spec.make_config(shape_name)
+    # kv_block sized so the per-layer score tensor stays bounded
+    kvb = {"train": 4096, "prefill": 8192}.get(shp["kind"], cfg.kv_block)
+    cfg = dataclasses.replace(cfg, scan_layers=(lowering == "scan"),
+                              unroll_kv=(lowering == "unroll"),
+                              kv_block=kvb)
+    opt_cfg = opt_cfg or _default_opt()
+    key = jax.random.PRNGKey(0)
+    a_params = jax.eval_shape(lambda k: T.init_params(cfg, k)[0], key)
+    _, p_specs = _lm_param_specs(cfg)
+    p_shard = _shardings_for(p_specs, a_params, rules)
+    B, S = shp["batch"], shp["seq"]
+    dp_names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = 1
+    for a in dp_names:
+        dsize *= mesh.shape[a]
+    # divisibility-aware batch sharding (long_500k decodes batch=1)
+    dp = P(dp_names) if B % dsize == 0 else P()
+    n_params = cfg.param_count()
+
+    if shp["kind"] == "train":
+        a_opt = jax.eval_shape(init_state, a_params)
+        o_shard = AdamWState(
+            NamedSharding(mesh, P()),
+            _shardings_for(p_specs, a_opt.m, rules),
+            _shardings_for(p_specs, a_opt.v, rules))
+        batch = {"tokens": _sds((B, S + 1), jnp.int32)}
+        b_shard = {"tokens": NamedSharding(mesh, dp)}
+        step = make_train_step(partial(T.loss_fn, cfg), opt_cfg)
+        mf = 6 * cfg.active_param_count() * B * S
+        return dict(fn=step, args=(a_params, a_opt, batch),
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    out_shardings=(p_shard, o_shard, None),
+                    donate_argnums=(0, 1), rules=rules,
+                    model_flops=mf, n_params=n_params)
+
+    if shp["kind"] == "prefill":
+        a_cache = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S)[0])
+        _, c_spec = T.init_cache(cfg, 1, 1)
+        c_shard = _shardings_for({"k": c_spec["k"], "v": c_spec["v"]},
+                                 a_cache, rules)
+        toks = _sds((B, S), jnp.int32)
+        fn = partial(T.prefill, cfg)
+        mf = 2 * cfg.active_param_count() * B * S
+        return dict(fn=fn, args=(a_params, toks, a_cache),
+                    in_shardings=(p_shard, NamedSharding(mesh, dp),
+                                  c_shard),
+                    out_shardings=(None, c_shard), donate_argnums=(2,),
+                    rules=rules, model_flops=mf, n_params=n_params)
+
+    # decode
+    a_cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S)[0])
+    _, c_spec = T.init_cache(cfg, 1, 1)
+    c_shard = _shardings_for({"k": c_spec["k"], "v": c_spec["v"]},
+                             a_cache, rules)
+    tok = _sds((B,), jnp.int32)
+    cur = _sds((B,), jnp.int32)
+    fn = partial(T.decode_step, cfg)
+    mf = 2 * cfg.active_param_count() * B  # one token per lane
+    return dict(fn=fn, args=(a_params, a_cache, tok, cur),
+                in_shardings=(p_shard, c_shard, NamedSharding(mesh, dp),
+                              NamedSharding(mesh, dp)),
+                out_shardings=(None, c_shard), donate_argnums=(1,),
+                rules=rules, model_flops=mf, n_params=n_params)
+
+
+def _lm_param_specs(cfg):
+    from ..models import transformer as T
+    k = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda kk: T.init_params(cfg, kk)[0], k)
+    # the static spec tree doesn't depend on dims: take it from a tiny clone
+    small = dataclasses.replace(cfg, n_layers=1, d_model=8, n_heads=2,
+                                n_kv_heads=2, head_dim=4, d_ff=8,
+                                vocab=16, n_experts=min(cfg.n_experts, 2))
+    _, sp = T.init_params(small, k)
+    return shapes, sp
+
+
+# --- GNN ---------------------------------------------------------------------
+
+def _gnn_cell(spec, shape_name, shp, mesh, rules, opt_cfg):
+    from ..models import gnn as G
+    from ..train.optimizer import AdamWState, init_state
+    from ..train.steps import make_train_step
+    cfg = spec.make_config(shape_name)
+    opt_cfg = opt_cfg or _default_opt()
+    key = jax.random.PRNGKey(0)
+    a_params = jax.eval_shape(lambda k: G.init_params(cfg, k)[0], key)
+    _, p_specs = G.init_params(cfg, key)
+    p_shard = _shardings_for(p_specs, a_params, rules)
+    a_opt = jax.eval_shape(init_state, a_params)
+    o_shard = AdamWState(NamedSharding(mesh, P()),
+                         _shardings_for(p_specs, a_opt.m, rules),
+                         _shardings_for(p_specs, a_opt.v, rules))
+    dp_names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = 1
+    for a in dp_names:
+        dsize *= mesh.shape[a]
+
+    if shp["kind"] == "sampled":
+        nb = shp["batch_nodes"]
+        f = shp["fanout"]
+        max_nodes = _pad_to(nb * (f[0] + 1) * (f[1] + 1), 8 * dsize)
+        max_edges = _pad_to(nb * (f[0] + f[0] * f[1]) * 2, 8 * dsize)
+        batch = {"feats": _sds((max_nodes, shp["d_feat"]), jnp.float32),
+                 "edges": _sds((max_edges, 2), jnp.int32),
+                 "labels": _sds((nb,), jnp.int32),
+                 "label_mask": _sds((nb,), jnp.float32)}
+        loss = partial(G.sampled_loss_fn, cfg)
+    elif shp["kind"] == "batched":
+        n = shp["batch"] * shp["n_nodes"]
+        e = shp["batch"] * shp["n_edges"]
+        batch = {"feats": _sds((n, shp["d_feat"]), jnp.float32),
+                 "edges": _sds((e, 2), jnp.int32),
+                 "labels": _sds((shp["batch"],), jnp.int32),
+                 "graph_ids": _sds((n,), jnp.int32)}
+        loss = partial(G.graph_loss_fn, cfg)
+    else:  # full graph
+        n = _pad_to(shp["n_nodes"], 8 * dsize)
+        e = _pad_to(shp["n_edges"], 8 * dsize)
+        batch = {"feats": _sds((n, shp["d_feat"]), jnp.float32),
+                 "edges": _sds((e, 2), jnp.int32),
+                 "labels": _sds((n,), jnp.int32),
+                 "label_mask": _sds((n,), jnp.float32)}
+        loss = partial(G.loss_fn, cfg)
+
+    b_shard = jax.tree.map(
+        lambda a: NamedSharding(
+            mesh, P(dp_names) if a.shape and a.shape[0] % dsize == 0
+            else P()), batch)
+    step = make_train_step(loss, opt_cfg)
+    # 2 flops/edge/feat propagation + dense layers, fwd+bwd(x3)
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [
+        cfg.n_classes]
+    nn = batch["feats"].shape[0]
+    ne = batch["edges"].shape[0]
+    mf = 3 * sum(2 * ne * dims[i] + 2 * nn * dims[i] * dims[i + 1]
+                 for i in range(cfg.n_layers))
+    return dict(fn=step, args=(a_params, a_opt, batch),
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1), rules=rules, model_flops=mf,
+                n_params=cfg.param_count())
+
+
+# --- RecSys ------------------------------------------------------------------
+
+def _recsys_cell(spec, shape_name, shp, mesh, rules, opt_cfg):
+    from ..models import recsys as R
+    from ..train.optimizer import AdamWState, init_state
+    from ..train.steps import make_train_step
+    cfg = spec.make_config(shape_name)
+    opt_cfg = opt_cfg or _default_opt()
+    key = jax.random.PRNGKey(0)
+    a_params = jax.eval_shape(lambda k: R.init_params(cfg, k)[0], key)
+    _, p_specs = R.init_params(
+        dataclasses.replace(cfg, total_vocab=max(cfg.n_sparse * 8, 512),
+                            field_vocabs=()), key)
+    p_shard = _shardings_for(p_specs, a_params, rules)
+    dp = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+    B = shp["batch"]
+
+    def batch_abstract(b):
+        if cfg.kind == "din":
+            return {"target_id": _sds((b,), jnp.int32),
+                    "hist_ids": _sds((b, cfg.seq_len), jnp.int32),
+                    "hist_mask": _sds((b, cfg.seq_len), jnp.bool_),
+                    "label": _sds((b,), jnp.float32)}
+        return {"sparse_ids": _sds((b, cfg.n_sparse), jnp.int32),
+                "dense": _sds((b, cfg.n_dense), jnp.float32),
+                "label": _sds((b,), jnp.float32)}
+
+    if shp["kind"] == "train":
+        a_opt = jax.eval_shape(init_state, a_params)
+        o_shard = AdamWState(NamedSharding(mesh, P()),
+                             _shardings_for(p_specs, a_opt.m, rules),
+                             _shardings_for(p_specs, a_opt.v, rules))
+        batch = batch_abstract(B)
+        b_shard = jax.tree.map(lambda a: NamedSharding(mesh, dp), batch)
+        step = make_train_step(partial(R.loss_fn, cfg), opt_cfg)
+        mf = 3 * _recsys_fwd_flops(cfg, B)
+        return dict(fn=step, args=(a_params, a_opt, batch),
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    out_shardings=(p_shard, o_shard, None),
+                    donate_argnums=(0, 1), rules=rules, model_flops=mf,
+                    n_params=cfg.param_count())
+
+    if shp["kind"] == "serve":
+        batch = batch_abstract(B)
+        b_shard = jax.tree.map(lambda a: NamedSharding(mesh, dp), batch)
+        fn = partial(R.forward, cfg)
+        return dict(fn=fn, args=(a_params, batch),
+                    in_shardings=(p_shard, b_shard),
+                    out_shardings=None, donate_argnums=(),
+                    rules=rules, model_flops=_recsys_fwd_flops(cfg, B),
+                    n_params=cfg.param_count())
+
+    # retrieval: 1 query x n_candidates
+    nc = shp["n_candidates"]
+    ncp = _pad_to(nc, 16 * 8)
+    user = _sds((shp["batch"], cfg.embed_dim), jnp.float32)
+    cands = _sds((ncp, cfg.embed_dim), jnp.float32)
+    fn = partial(R.retrieval_topk, k=100)
+    c_shard = NamedSharding(mesh, resolve_spec(
+        ("candidates", "table_dim"), (ncp, cfg.embed_dim), rules))
+    return dict(fn=lambda u, c: fn(u, c), args=(user, cands),
+                in_shardings=(NamedSharding(mesh, P()), c_shard),
+                out_shardings=None, donate_argnums=(),
+                rules=rules,
+                model_flops=2 * shp["batch"] * ncp * cfg.embed_dim,
+                n_params=ncp * cfg.embed_dim)
+
+
+def _recsys_fwd_flops(cfg, B):
+    f = 2 * B * cfg.n_sparse * cfg.embed_dim          # bag sums
+    if cfg.kind in ("fm", "deepfm"):
+        f += 4 * B * cfg.n_sparse * cfg.embed_dim     # sum-square trick
+    if cfg.kind in ("deepfm", "wide_deep"):
+        dims = ([cfg.n_sparse * cfg.embed_dim + cfg.n_dense]
+                + list(cfg.mlp_dims) + [1])
+        f += 2 * B * sum(dims[i] * dims[i + 1]
+                         for i in range(len(dims) - 1))
+    if cfg.kind == "din":
+        dims = [4 * cfg.embed_dim] + list(cfg.attn_mlp_dims) + [1]
+        f += 2 * B * cfg.seq_len * sum(dims[i] * dims[i + 1]
+                                       for i in range(len(dims) - 1))
+        dims = [3 * cfg.embed_dim] + list(cfg.mlp_dims) + [1]
+        f += 2 * B * sum(dims[i] * dims[i + 1]
+                         for i in range(len(dims) - 1))
+    return f
+
+
+# --- JAG ---------------------------------------------------------------------
+
+def _jag_cell(spec, shape_name, shp, mesh, rules):
+    from ..core.build import BuildConfig
+    from ..core.distributed import (ShardedServeConfig, make_build_step,
+                                    make_serve_step, shard_axes)
+    import numpy as np
+    sx = shard_axes(mesh)
+    S = 1
+    for a in sx:
+        S *= mesh.shape[a]
+    n_loc = shp["n_local"]
+    d = shp["d"]
+    qx = tuple(a for a in ("pod",) if a in mesh.axis_names)
+    Bq = shp["batch"] * (mesh.shape["pod"] if "pod" in mesh.axis_names
+                         else 1)
+
+    shard_spec = NamedSharding(mesh, P(sx))
+    q_spec = NamedSharding(mesh, P(qx) if qx else P())
+
+    if shp["kind"] == "jag_serve":
+        W = shp["row_width"]
+        cfgs = ShardedServeConfig(k=shp["k"], ls=shp["ls"],
+                                  max_iters=shp["max_iters"],
+                                  query_chunk=shp["query_chunk"])
+        fn = make_serve_step(mesh, cfgs, "range", "range")
+        args = (_sds((S, n_loc, W), jnp.int32),
+                _sds((S, n_loc, d), jnp.bfloat16),
+                _sds((S, n_loc), jnp.float32),
+                {"value": _sds((S, n_loc), jnp.float32)},
+                _sds((S, shp["n_seeds"]), jnp.int32),
+                _sds((Bq, d), jnp.bfloat16),
+                {"lo": _sds((Bq,), jnp.float32),
+                 "hi": _sds((Bq,), jnp.float32)})
+        in_sh = (shard_spec, shard_spec, shard_spec,
+                 {"value": shard_spec}, shard_spec, q_spec,
+                 {"lo": q_spec, "hi": q_spec})
+        # model flops: expansions x R x d per query per shard (dominant)
+        mf = Bq * S * shp["max_iters"] * W * d * 2
+        # HloCostAnalysis counts the (chunk-map x beam-while) body once;
+        # nearly all serve work lives inside that double loop, so scale
+        # measured flops/bytes multiplicatively (documented in DESIGN.md).
+        nch = max((shp["batch"]) // shp["query_chunk"], 1)
+        return dict(fn=fn, args=args, in_shardings=in_sh,
+                    out_shardings=None, donate_argnums=(), rules=rules,
+                    model_flops=mf, n_params=S * n_loc * (d + W),
+                    flops_scale=nch * shp["max_iters"])
+
+    # jag_build
+    bc = BuildConfig(degree=shp["degree"], ls_build=shp["ls_build"],
+                     thresholds=(np.inf, 1000.0, 0.0),
+                     cand_pool=shp["cand_pool"],
+                     ex_slots=shp["ex_slots"], batch_size=shp["batch"])
+    fn = make_build_step(mesh, bc, "range")
+    W = shp["degree"] + shp["ex_slots"]
+    args = (_sds((S, n_loc, W), jnp.int32),
+            _sds((S, n_loc), jnp.int32),
+            _sds((S, n_loc, d), jnp.bfloat16),
+            _sds((S, n_loc), jnp.float32),
+            {"value": _sds((S, n_loc), jnp.float32)},
+            _sds((S, shp["batch"]), jnp.int32),
+            _sds((S, 8), jnp.int32))
+    in_sh = (shard_spec,) * 4 + ({"value": shard_spec}, shard_spec,
+                                 shard_spec)
+    mf = (shp["batch"] * S
+          * (3 * 2 * shp["ls_build"] * W * d * 2              # searches
+             + shp["cand_pool"] ** 2 * d * 2))                # pair d2
+    # build mixes loop regimes (search whiles, prune fori, one-shot sorts);
+    # no single multiplier is honest -> analytic-compute-only (DESIGN.md).
+    return dict(fn=fn, args=args, in_shardings=in_sh,
+                out_shardings=(shard_spec, shard_spec),
+                donate_argnums=(0, 1), rules=rules, model_flops=mf,
+                n_params=S * n_loc * (d + W), analytic_only=True)

@@ -1,0 +1,11 @@
+"""JAG core: the paper's contribution as a composable JAX module."""
+from .filters import (AttrTable, FilterBatch, LABEL, RANGE, SUBSET, BOOLEAN,
+                      label_table, range_table, subset_table, boolean_table,
+                      label_filters, range_filters, subset_filters,
+                      boolean_filters, matches, matches_all, selectivity,
+                      pack_bits, unpack_bits)
+from .distances import dist_a, dist_f, capped, sq_norms
+from .beam_search import greedy_search, SearchResult
+from .build import BuildConfig, build_graph, medoid
+from .prune import joint_robust_prune
+from .jag import JAGConfig, JAGIndex

@@ -1,0 +1,273 @@
+"""Baseline filtered-ANN algorithms (paper §4.2 / Appendix D.4).
+
+Implemented by mechanism, with the paper baseline each one stands in for:
+
+  post_filter       — Post-Filtering: unfiltered Vamana-style search with an
+                      oversampled beam, filter applied to the results.
+  pre_filter        — Pre-Filtering: exact masked scan (ground_truth module).
+  binary_jag        — FilteredVamana-flavored: strict-attribute build (T={0})
+                      + binary match/non-match traversal, i.e. JAG with the
+                      paper's "trivial" dist_F/dist_A (§3.1 Discussion).
+  acorn             — ACORN-gamma-flavored: attribute-oblivious graph,
+                      two-hop expansion at query time, predicate-passing
+                      candidates prioritized.
+  rwalks            — RWalks-flavored: attribute-oblivious graph + random-walk
+                      attribute diffusion at build; query key =
+                      h * dist_F(aggregated attrs) + dist (weighted mix, with
+                      our generalized dist_F per the paper's D.4 footnote).
+  stitched (labels) — StitchedVamana-flavored: one pure-vector subgraph per
+                      label, queries routed to their label's subgraph.
+
+All baselines share the batched GreedySearch / batch-build substrate, so
+QPS and distance-computation comparisons against JAG are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .beam_search import SearchResult, greedy_search
+from .build import BuildConfig, build_graph
+from .distances import (INF, dist_f, hard_filter_key_fn, query_key_fn,
+                        sq_norms, unfiltered_key_fn)
+from .filters import (AttrTable, FilterBatch, BOOLEAN, LABEL, RANGE, SUBSET,
+                      matches, n_words, pack_bits)
+from .ground_truth import exact_filtered_knn
+from .jag import JAGConfig, JAGIndex
+
+
+def build_unfiltered(xb, attr: AttrTable, cfg: JAGConfig) -> JAGIndex:
+    """Pure vector-distance graph (threshold quantile 100% only)."""
+    c = dataclasses.replace(cfg, mode="threshold",
+                            threshold_quantiles=(1.0,))
+    return JAGIndex.build(xb, attr, c)
+
+
+def build_binary(xb, attr: AttrTable, cfg: JAGConfig) -> JAGIndex:
+    """Strict-attribute + vector graph: thresholds {0%, 100%}."""
+    c = dataclasses.replace(cfg, mode="threshold",
+                            threshold_quantiles=(1.0, 0.0))
+    return JAGIndex.build(xb, attr, c)
+
+
+# ---------------------------------------------------------------------------
+# post-filtering
+# ---------------------------------------------------------------------------
+
+def post_filter_search(index: JAGIndex, queries, filt: FilterBatch,
+                       k: int = 10, ls: int = 64,
+                       max_iters: int = 0) -> SearchResult:
+    """Unfiltered search with beam ls, keep the k best filter-passing."""
+    res = index.search_unfiltered(queries, k=ls, ls=ls, max_iters=max_iters)
+    ids = res.ids
+    attrs = index.attr.gather(jnp.maximum(ids, 0))
+    ok = matches(filt, attrs) & (ids >= 0)
+    prim = jnp.where(ok, 0.0, INF)
+    sec = jnp.where(ok, res.secondary, INF)
+    idsm = jnp.where(ok, ids, -1)
+    prim, sec, idsm = jax.lax.sort((prim, sec, idsm), num_keys=2)
+    return SearchResult(idsm[:, :k], prim[:, :k], sec[:, :k], res.vlog,
+                        res.n_expanded, res.n_dist)
+
+
+# ---------------------------------------------------------------------------
+# binary (FilteredVamana-flavored)
+# ---------------------------------------------------------------------------
+
+def binary_search(index: JAGIndex, queries, filt: FilterBatch, k: int = 10,
+                  ls: int = 64, max_iters: int = 0) -> SearchResult:
+    max_iters = max_iters or 2 * ls
+
+    @jax.jit
+    def run(graph, xb, xb_norm, attr, q, filt, entry):
+        return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                             hard_filter_key_fn(filt), ls=ls, k=k,
+                             max_iters=max_iters)
+    res = run(index.graph, index.xb, index.xb_norm, index.attr,
+              jnp.asarray(queries), filt, index.entry)
+    # re-key primaries to exact dist_F==0 convention for recall accounting
+    ok = res.primary == 0.0
+    return SearchResult(jnp.where(ok, res.ids, -1),
+                        jnp.where(ok, 0.0, INF), res.secondary,
+                        res.vlog, res.n_expanded, res.n_dist)
+
+
+# ---------------------------------------------------------------------------
+# ACORN-gamma-flavored: two-hop expansion over an oblivious graph
+# ---------------------------------------------------------------------------
+
+def acorn_search(index: JAGIndex, queries, filt: FilterBatch, k: int = 10,
+                 ls: int = 64, max_iters: int = 0,
+                 hop2_per_nbr: int = 4) -> SearchResult:
+    """Two-hop candidate pool; predicate-passing candidates keyed first."""
+    max_iters = max_iters or 2 * ls
+    W = index.graph.shape[1]
+    h2 = min(hop2_per_nbr, W)
+
+    @jax.jit
+    def run(graph, xb, xb_norm, attr, q, filt, entry):
+        def expand(p):
+            one = jnp.take(graph, p, axis=0)                   # [B, W]
+            two = jnp.take(graph, jnp.maximum(one, 0), axis=0)[..., :h2]
+            two = jnp.where((one >= 0)[:, :, None], two, -1)
+            return jnp.concatenate([one, two.reshape(one.shape[0], -1)],
+                                   axis=1)
+        return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                             hard_filter_key_fn(filt), ls=ls, k=k,
+                             max_iters=max_iters, expand_fn=expand)
+    res = run(index.graph, index.xb, index.xb_norm, index.attr,
+              jnp.asarray(queries), filt, index.entry)
+    ok = res.primary == 0.0
+    return SearchResult(jnp.where(ok, res.ids, -1),
+                        jnp.where(ok, 0.0, INF), res.secondary,
+                        res.vlog, res.n_expanded, res.n_dist)
+
+
+# ---------------------------------------------------------------------------
+# RWalks-flavored: random-walk attribute diffusion
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RWalksIndex:
+    base: JAGIndex
+    agg: AttrTable          # aggregated (diffused) attributes
+    h: float                # weight of the filter-distance term
+
+
+def build_rwalks(xb, attr: AttrTable, cfg: JAGConfig, m: int = 5,
+                 depth: int = 3, h: float = 0.1, seed: int = 0,
+                 index: Optional[JAGIndex] = None) -> RWalksIndex:
+    """m random walks of length `depth` aggregate attributes per node."""
+    base = index if index is not None else build_unfiltered(xb, attr, cfg)
+    graph = base.graph
+    N, W = graph.shape
+    rng = np.random.default_rng(seed)
+    cur = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[:, None],
+                           (N, m))
+
+    def agg_init():
+        if attr.kind == LABEL:
+            L = int(np.asarray(attr.data["label"]).max()) + 1
+            bits = jax.nn.one_hot(attr.data["label"], L, dtype=jnp.uint32)
+            return {"bits": pack_bits(bits)}, L
+        if attr.kind == RANGE:
+            v = attr.data["value"]
+            return {"lo": v, "hi": v}, 0
+        if attr.kind == SUBSET:
+            return {"bits": attr.data["bits"]}, attr.n_bits
+        if attr.kind == BOOLEAN:  # diffuse assignments as a seen-set OR
+            return {"assign": attr.data["assign"]}, attr.n_bits
+        raise ValueError(attr.kind)
+
+    agg, L = agg_init()
+    for step in range(depth):
+        r = jnp.asarray(rng.integers(0, W, (N, m)), jnp.int32)
+        nxt = graph[cur, r]
+        cur = jnp.where(nxt >= 0, nxt, cur)
+        cc = jnp.maximum(cur, 0)
+        if attr.kind == RANGE:
+            v = jnp.take(attr.data["value"], cc)
+            agg = {"lo": jnp.minimum(agg["lo"], jnp.min(v, axis=1)),
+                   "hi": jnp.maximum(agg["hi"], jnp.max(v, axis=1))}
+        elif attr.kind in (LABEL, SUBSET):
+            src = (pack_bits(jax.nn.one_hot(
+                jnp.take(attr.data["label"], cc), L, dtype=jnp.uint32))
+                if attr.kind == LABEL else
+                jnp.take(attr.data["bits"], cc, axis=0))
+            acc = agg["bits"]
+            for j in range(m):
+                acc = acc | src[:, j]
+            agg = {"bits": acc}
+        # BOOLEAN: keep own assignment (diffusion undefined for predicates)
+    kind = SUBSET if attr.kind in (LABEL, SUBSET) else attr.kind
+    agg_table = AttrTable(kind, agg, n_bits=L or attr.n_bits)
+    return RWalksIndex(base, agg_table, h)
+
+
+def _rwalks_dist_f(filt: FilterBatch, agg_kind: str,
+                   attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    if filt.kind == LABEL:   # agg is a label bitset; f passes if label seen
+        lab = filt.data["label"][:, None]
+        word = lab // 32
+        bit = (lab % 32).astype(jnp.uint32)
+        w = jnp.take_along_axis(attrs["bits"], word[..., None], axis=-1)
+        return ((w[..., 0] >> bit) & 1 == 0).astype(jnp.float32)
+    if filt.kind == RANGE:   # gap between query range and node interval
+        lo = filt.data["lo"][:, None]
+        hi = filt.data["hi"][:, None]
+        return (jnp.maximum(lo - attrs["hi"], 0.0)
+                + jnp.maximum(attrs["lo"] - hi, 0.0))
+    return dist_f(filt, attrs)
+
+
+def rwalks_search(rw: RWalksIndex, queries, filt: FilterBatch, k: int = 10,
+                  ls: int = 64, max_iters: int = 0) -> SearchResult:
+    max_iters = max_iters or 2 * ls
+    base = rw.base
+    h = jnp.float32(rw.h)
+
+    @jax.jit
+    def run(graph, xb, xb_norm, attr, agg, q, filt, entry):
+        def key_fn(ids, _attrs, d2):
+            ag = agg.gather(ids)
+            return h * _rwalks_dist_f(filt, agg.kind, ag) + jnp.sqrt(d2), d2
+        return greedy_search(graph, xb, xb_norm, attr, q, entry, key_fn,
+                             ls=ls, k=ls, max_iters=max_iters)
+    res = run(base.graph, base.xb, base.xb_norm, base.attr, rw.agg,
+              jnp.asarray(queries), filt, base.entry)
+    # post-validate: keep exact matches only, re-ranked by vector distance
+    ids = res.ids
+    ok = matches(filt, base.attr.gather(jnp.maximum(ids, 0))) & (ids >= 0)
+    prim = jnp.where(ok, 0.0, INF)
+    sec = jnp.where(ok, res.secondary, INF)
+    idsm = jnp.where(ok, ids, -1)
+    prim, sec, idsm = jax.lax.sort((prim, sec, idsm), num_keys=2)
+    return SearchResult(idsm[:, :k], prim[:, :k], sec[:, :k], res.vlog,
+                        res.n_expanded, res.n_dist)
+
+
+# ---------------------------------------------------------------------------
+# StitchedVamana-flavored (label filters)
+# ---------------------------------------------------------------------------
+
+class StitchedLabelIndex:
+    """One pure-vector subgraph per label; queries routed by label."""
+
+    def __init__(self, xb, attr: AttrTable, cfg: JAGConfig):
+        assert attr.kind == LABEL
+        labels = np.asarray(attr.data["label"])
+        self.sub: Dict[int, tuple] = {}
+        for lab in np.unique(labels):
+            ids = np.flatnonzero(labels == lab)
+            sub_attr = AttrTable(LABEL,
+                                 {"label": jnp.asarray(labels[ids])})
+            c = dataclasses.replace(
+                cfg, mode="threshold", threshold_quantiles=(1.0,),
+                batch_size=min(cfg.batch_size, max(8, len(ids) // 4)))
+            idx = JAGIndex.build(jnp.asarray(xb)[ids], sub_attr, c)
+            self.sub[int(lab)] = (idx, jnp.asarray(ids, jnp.int32))
+
+    def search(self, queries, filt: FilterBatch, k=10, ls=64):
+        """Route each query to its label subgraph (grouped by label)."""
+        qlab = np.asarray(filt.data["label"])
+        B = qlab.shape[0]
+        ids = np.full((B, k), -1, np.int32)
+        d2 = np.full((B, k), np.inf, np.float32)
+        ndist = np.zeros((B,), np.int32)
+        for lab, (idx, gids) in self.sub.items():
+            sel = np.flatnonzero(qlab == lab)
+            if sel.size == 0:
+                continue
+            res = idx.search_unfiltered(jnp.asarray(queries)[sel], k=k, ls=ls)
+            rid = np.asarray(res.ids)
+            ids[sel] = np.where(rid >= 0, np.asarray(gids)[rid], -1)
+            d2[sel] = np.asarray(res.secondary)
+            ndist[sel] = np.asarray(res.n_dist)
+        prim = np.where(ids >= 0, 0.0, np.inf).astype(np.float32)
+        return SearchResult(jnp.asarray(ids), jnp.asarray(prim),
+                            jnp.asarray(d2), None, None, jnp.asarray(ndist))

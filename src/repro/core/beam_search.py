@@ -1,0 +1,191 @@
+"""Batched GreedySearch (Algorithm 1) as a TPU-friendly ``lax.while_loop``.
+
+B queries advance in lock-step. Per-query state:
+
+  beam_ids/primary/secondary/visited : the l_s-slot beam, kept sorted by the
+      lexicographic key (primary, secondary) at all times — "best unvisited"
+      selection is then just the first unvisited slot.
+  seen : packed uint32 bitmap [B, ceil(N/32)], marked at candidate-generation
+      time (identical semantics to the HNSW/Vamana visited array).
+  vlog : ids expanded per iteration (the paper's visited set V, consumed by
+      Insert); n_dist counts distance computations for the Fig. 10-13 metric.
+
+Termination: a lane is done when every beam slot is visited; the loop stops
+when all lanes are done or after ``max_iters`` expansions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .distances import INF, KeyFn, gathered_d2
+from .filters import AttrTable
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray        # int32 [B, k]  (-1 padded)
+    primary: jnp.ndarray    # f32 [B, k]
+    secondary: jnp.ndarray  # f32 [B, k]   (squared L2)
+    vlog: jnp.ndarray       # int32 [B, max_iters] expanded ids, -1 holes
+    n_expanded: jnp.ndarray  # int32 [B]
+    n_dist: jnp.ndarray     # int32 [B]
+
+
+class _State(NamedTuple):
+    it: jnp.ndarray
+    beam_ids: jnp.ndarray
+    beam_p: jnp.ndarray
+    beam_s: jnp.ndarray
+    beam_vis: jnp.ndarray
+    seen: jnp.ndarray
+    vlog: jnp.ndarray
+    n_expanded: jnp.ndarray
+    n_dist: jnp.ndarray
+
+
+def _mask_dup_within_row(ids: jnp.ndarray) -> jnp.ndarray:
+    """True where ids[b, j] duplicates an earlier entry of the same row."""
+    eq = ids[:, :, None] == ids[:, None, :]
+    lower = jnp.tril(jnp.ones(eq.shape[-2:], jnp.bool_), k=-1)
+    return jnp.any(eq & lower, axis=-1)
+
+
+def _sort_beam(p, s, ids, vis):
+    """Lexicographic sort of beam rows by (primary, secondary)."""
+    p, s, ids, vis8 = jax.lax.sort(
+        (p, s, ids, vis.astype(jnp.int8)), num_keys=2)
+    return p, s, ids, vis8.astype(jnp.bool_)
+
+
+def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
+                  xb: jnp.ndarray,         # [N, d]
+                  xb_norm: jnp.ndarray,    # f32 [N]
+                  attr: AttrTable,
+                  queries: jnp.ndarray,    # [B, d]
+                  entry: jnp.ndarray,      # int32 [S] seed vertices (or scalar)
+                  key_fn: KeyFn,
+                  *, ls: int, k: int, max_iters: int,
+                  dist_fn=gathered_d2, expand_fn=None,
+                  fetch_fn=None, dedup: str = "bitmap") -> SearchResult:
+    """GreedySearch under a lexicographic comparator. See module docstring.
+
+    ``expand_fn(p int32[B]) -> int32[B, C]`` overrides the 1-hop neighbor
+    expansion (e.g. the ACORN-style 2-hop baseline); default gathers graph[p].
+    ``fetch_fn(ids, q32, q_norm) -> (d2, attrs)`` fuses the distance + attr
+    fetch into one row gather (int8/fused-layout serving, §Perf).
+    ``dedup``: "bitmap" = packed seen-bits over N (exact, O(N/32) state);
+    "scan" = compare against beam ∪ expansion log only (no N-sized state —
+    removes the bitmap's HBM traffic; an evicted-unexpanded candidate may be
+    revisited, which only costs work, never correctness).
+    """
+    N = xb.shape[0]
+    B = queries.shape[0]
+    R = graph.shape[1]
+    Wn = (N + 31) // 32 if dedup == "bitmap" else 1
+    q32 = queries.astype(jnp.float32)
+    q_norm = jnp.sum(q32 * q32, axis=-1)
+
+    def _fetch(ids):
+        if fetch_fn is not None:
+            return fetch_fn(ids, q32, q_norm)
+        return dist_fn(xb, xb_norm, ids, q32, q_norm), attr.gather(ids)
+
+    # --- initial beam = seed set (medoid + stratified seeds) ---------------
+    entry = jnp.atleast_1d(jnp.asarray(entry, jnp.int32))
+    S = entry.shape[0]
+    assert S <= ls, "more seeds than beam slots"
+    e_ids = jnp.broadcast_to(entry[None, :], (B, S))
+    e_d2, e_attrs = _fetch(e_ids)
+    e_p, e_s = key_fn(e_ids, e_attrs, e_d2)
+    # dedup repeated seeds so beam rows stay duplicate-free
+    sdup = _mask_dup_within_row(e_ids)
+    e_p = jnp.where(sdup, INF, e_p)
+    e_s = jnp.where(sdup, INF, e_s)
+
+    beam_ids = jnp.full((B, ls), -1, jnp.int32).at[:, :S].set(e_ids)
+    beam_p = jnp.full((B, ls), INF).at[:, :S].set(e_p)
+    beam_s = jnp.full((B, ls), INF).at[:, :S].set(e_s)
+    beam_vis = jnp.ones((B, ls), jnp.bool_).at[:, :S].set(sdup)
+    beam_p, beam_s, beam_ids, beam_vis = _sort_beam(
+        beam_p, beam_s, beam_ids, beam_vis)
+
+    seen = jnp.zeros((B, Wn), jnp.uint32)
+    if dedup == "bitmap":
+        dup1d = _mask_dup_within_row(entry[None, :])[0]       # [S]
+        bitvals = jnp.where(
+            dup1d, jnp.uint32(0),
+            jnp.uint32(1) << (entry % 32).astype(jnp.uint32))
+        seen = seen.at[:, entry // 32].add(bitvals[None, :])
+
+    st = _State(jnp.int32(0), beam_ids, beam_p, beam_s, beam_vis, seen,
+                jnp.full((B, max_iters), -1, jnp.int32),
+                jnp.zeros((B,), jnp.int32), jnp.ones((B,), jnp.int32))
+
+    def cond(st: _State):
+        return (st.it < max_iters) & jnp.any(~jnp.all(st.beam_vis, axis=1))
+
+    def body(st: _State):
+        active = ~jnp.all(st.beam_vis, axis=1)                    # [B]
+        sel = jnp.argmax(~st.beam_vis, axis=1)                    # first unvis
+        p = jnp.take_along_axis(st.beam_ids, sel[:, None], 1)[:, 0]
+        beam_vis = st.beam_vis.at[jnp.arange(B), sel].set(
+            st.beam_vis[jnp.arange(B), sel] | active)
+        vlog = st.vlog.at[:, st.it].set(jnp.where(active, p, -1))
+
+        # --- expand out-neighbors ---------------------------------------
+        if expand_fn is None:
+            nbrs = jnp.take(graph, jnp.maximum(p, 0), axis=0)     # [B, R]
+        else:
+            nbrs = expand_fn(jnp.maximum(p, 0))                   # [B, C]
+        valid = (nbrs >= 0) & active[:, None]
+        nbrs_c = jnp.maximum(nbrs, 0)
+        if dedup == "bitmap":
+            word = nbrs_c // 32
+            bitv = jnp.uint32(1) << (nbrs_c % 32).astype(jnp.uint32)
+            already = (jnp.take_along_axis(st.seen, word, 1) & bitv) > 0
+            seen = st.seen.at[jnp.arange(B)[:, None], word].add(
+                jnp.where(valid & ~already & ~_mask_dup_within_row(nbrs),
+                          bitv, jnp.uint32(0)))
+        else:  # "scan": membership test vs beam ∪ expansion log
+            in_beam = jnp.any(
+                nbrs[:, :, None] == st.beam_ids[:, None, :], axis=-1)
+            in_log = jnp.any(
+                nbrs[:, :, None] == st.vlog[:, None, :], axis=-1)
+            already = in_beam | in_log
+            seen = st.seen
+        dup = _mask_dup_within_row(nbrs)
+        new = valid & ~already & ~dup
+
+        d2, c_attrs = _fetch(nbrs_c)
+        cp, cs = key_fn(nbrs_c, c_attrs, d2)
+        cp = jnp.where(new, cp, INF)
+        cs = jnp.where(new, cs, INF)
+        c_ids = jnp.where(new, nbrs, -1)
+        c_vis = ~new  # masked entries visited=True so they never block/expand
+        n_dist = st.n_dist + jnp.sum(new, axis=1, dtype=jnp.int32)
+
+        # --- merge + truncate to ls --------------------------------------
+        m_p = jnp.concatenate([st.beam_p, cp], axis=1)
+        m_s = jnp.concatenate([st.beam_s, cs], axis=1)
+        m_ids = jnp.concatenate([st.beam_ids, c_ids], axis=1)
+        m_vis = jnp.concatenate([beam_vis, c_vis], axis=1)
+        m_p, m_s, m_ids, m_vis = _sort_beam(m_p, m_s, m_ids, m_vis)
+
+        return _State(st.it + 1, m_ids[:, :ls], m_p[:, :ls], m_s[:, :ls],
+                      m_vis[:, :ls], seen, vlog,
+                      st.n_expanded + active.astype(jnp.int32), n_dist)
+
+    st = jax.lax.while_loop(cond, body, st)
+
+    # top-k among *visited* beam entries (Algorithm 1 line 17)
+    fp = jnp.where(st.beam_vis & (st.beam_ids >= 0), st.beam_p, INF)
+    fs = jnp.where(st.beam_vis & (st.beam_ids >= 0), st.beam_s, INF)
+    fids = jnp.where(st.beam_vis & (st.beam_ids >= 0), st.beam_ids, -1)
+    fp, fs, fids, _ = _sort_beam(fp, fs, fids,
+                                 jnp.zeros_like(fids, jnp.bool_))
+    return SearchResult(fids[:, :k], fp[:, :k], fs[:, :k], st.vlog,
+                        st.n_expanded, st.n_dist)

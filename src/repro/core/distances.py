@@ -1,0 +1,167 @@
+"""Filter distance ``dist_F``, attribute distance ``dist_A`` and the unified
+lexicographic comparators of JAG §3.1–3.2.
+
+Conventions
+-----------
+* Vector distances are **squared** L2 internally (monotone in true L2, so all
+  orderings are unchanged); Weight-JAG takes sqrt so ``w·dist_A + dist`` mixes
+  on the paper's scale.
+* All comparator keys are pairs ``(primary, secondary)`` of float32, compared
+  lexicographically via ``lax.sort(..., num_keys=2)``.
+* ``dist_F``/``dist_A`` broadcast a per-lane filter/attribute ``[B]`` against
+  gathered candidate attributes ``[B, C]``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .filters import (AttrTable, FilterBatch, BOOLEAN, LABEL, RANGE, SUBSET,
+                      popcount)
+
+INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# dist_F : how far attribute a is from satisfying filter f  (§3.1 examples)
+# ---------------------------------------------------------------------------
+
+def dist_f(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """dist_F(f_q, a) for gathered candidate attrs [B, C, ...] -> f32[B, C]."""
+    k = filt.kind
+    if k == LABEL:
+        return (attrs["label"] != filt.data["label"][:, None]).astype(
+            jnp.float32)
+    if k == RANGE:
+        v = attrs["value"]
+        lo = filt.data["lo"][:, None]
+        hi = filt.data["hi"][:, None]
+        return jnp.maximum(lo - v, 0.0) + jnp.maximum(v - hi, 0.0)
+    if k == SUBSET:
+        f = filt.data["bits"][:, None, :]
+        return popcount(f & ~attrs["bits"]).astype(jnp.float32)  # |f \ a|
+    if k == BOOLEAN:
+        a = attrs["assign"].astype(jnp.int32)
+        return jnp.take_along_axis(filt.data["table"], a, axis=-1)
+    raise ValueError(k)
+
+
+# ---------------------------------------------------------------------------
+# dist_A : semantic proximity between two attributes  (§3.1 examples)
+# ---------------------------------------------------------------------------
+
+def dist_a(kind: str, a_p: Dict[str, jnp.ndarray],
+           a_c: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """dist_A(a_p, a_c): base attrs [B, ...] vs candidates [B, C, ...]."""
+    if kind == LABEL:
+        return (a_p["label"][:, None] != a_c["label"]).astype(jnp.float32)
+    if kind == RANGE:
+        return jnp.abs(a_p["value"][:, None] - a_c["value"])
+    if kind == SUBSET:
+        if "bit_weights" in a_c:
+            # YFCC-style weighted distance (paper D.3):
+            #   dist_A = C - sum_{i in a_u ∩ a_v} log(1/p_i)
+            w = a_c["bit_weights"]                       # [L]
+            inter = a_p["bits"][:, None, :] & a_c["bits"]  # [B, C, W]
+            overlap = _weighted_popcount(inter, w)
+            return jnp.sum(w) - overlap
+        return popcount(a_p["bits"][:, None, :] ^ a_c["bits"]).astype(
+            jnp.float32)
+    if kind == BOOLEAN:
+        x = a_p["assign"][:, None] ^ a_c["assign"]
+        return jax.lax.population_count(x).astype(jnp.float32)
+    raise ValueError(kind)
+
+
+def _weighted_popcount(words: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Sum of per-bit weights over set bits. words [..., W], w [L<=32*W]."""
+    W = words.shape[-1]
+    L = w.shape[0]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[..., :, None] >> shifts) & jnp.uint32(1)).astype(
+        jnp.float32)                                     # [..., W, 32]
+    bits = bits.reshape(words.shape[:-1] + (W * 32,))[..., :L]
+    return bits @ w
+
+
+def capped(da: jnp.ndarray, t) -> jnp.ndarray:
+    """Capped attribute distance max(dist_A - t, 0) (§3.2)."""
+    return jnp.maximum(da - t, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# comparator factories: return key_fn(cand_ids, cand_attrs, d2) -> (prim, sec)
+# ---------------------------------------------------------------------------
+
+KeyFn = Callable[[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray],
+                 tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def query_key_fn(filt: FilterBatch) -> KeyFn:
+    """D_F(q, u) = (dist_F(f_q, a_u), dist(x_q, x_u)) — Algorithm 2."""
+    def key_fn(ids, attrs, d2):
+        del ids
+        return dist_f(filt, attrs), d2
+    return key_fn
+
+
+def unfiltered_key_fn() -> KeyFn:
+    """Plain vector-distance comparator (post-filtering / 100% threshold)."""
+    def key_fn(ids, attrs, d2):
+        del ids, attrs
+        return jnp.zeros_like(d2), d2
+    return key_fn
+
+
+def hard_filter_key_fn(filt: FilterBatch, penalty: float = 1.0) -> KeyFn:
+    """Binary match/non-match comparator (the paper's trivial dist_F).
+
+    Equivalent to FilteredVamana-style traversal that prefers valid nodes but
+    can still pass through invalid ones.
+    """
+    def key_fn(ids, attrs, d2):
+        del ids
+        df = dist_f(filt, attrs)
+        return (df > 0).astype(jnp.float32) * penalty, d2
+    return key_fn
+
+
+def build_threshold_key_fn(kind: str, a_p: Dict[str, jnp.ndarray],
+                           t) -> KeyFn:
+    """D_A^t(p, u) = (max(dist_A(a_p,a_u)-t, 0), dist(x_p,x_u)) — §3.2."""
+    def key_fn(ids, attrs, d2):
+        del ids
+        return capped(dist_a(kind, a_p, attrs), t), d2
+    return key_fn
+
+
+def build_weight_key_fn(kind: str, a_p: Dict[str, jnp.ndarray],
+                        w) -> KeyFn:
+    """D_A^w(p, u) = w·dist_A + dist (Weight-JAG §3.4); secondary = d2."""
+    def key_fn(ids, attrs, d2):
+        del ids
+        return w * dist_a(kind, a_p, attrs) + jnp.sqrt(d2), d2
+    return key_fn
+
+
+# ---------------------------------------------------------------------------
+# squared-L2 helpers
+# ---------------------------------------------------------------------------
+
+def sq_norms(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+
+
+def gathered_d2(xb: jnp.ndarray, xb_norm: jnp.ndarray, ids: jnp.ndarray,
+                q: jnp.ndarray, q_norm: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 between q[b] and xb[ids[b, c]] via gather + dot.
+
+    xb [N, d]; ids int32[B, C] (clipped); q [B, d]; -> f32[B, C].
+    """
+    rows = jnp.take(xb, ids, axis=0, mode="clip")        # [B, C, d]
+    dots = jnp.einsum("bcd,bd->bc", rows.astype(jnp.float32),
+                      q.astype(jnp.float32))
+    d2 = jnp.take(xb_norm, ids, mode="clip") - 2.0 * dots + q_norm[:, None]
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,265 @@
+"""Filter & attribute representations for the four filter families in JAG.
+
+The paper (§2, §3.1) defines four filter constraints — Label equality, numeric
+Range, Subset containment, and arbitrary Boolean predicates — together with a
+continuous ``dist_F`` (query time) and ``dist_A`` (build time) for each.
+
+TPU-native layout decisions (see DESIGN.md §2):
+  * label      : ``int32[N]``
+  * range      : ``float32[N]``
+  * subset     : bit-packed ``uint32[N, W]`` with ``W = ceil(L / 32)``
+  * boolean    : assignment ``uint32[N]`` (L <= MAX_BOOL_VARS bits); the filter
+                 itself is a per-query *distance table* ``float32[2**L]`` built
+                 by min-plus relaxation on the hypercube, so the query-time
+                 ``dist_F`` (min #bit flips to satisfy f) is a single gather.
+
+Attribute tables and filter batches are registered dataclass pytrees whose
+``kind`` field is static, so they can flow through ``jax.jit`` boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LABEL = "label"
+RANGE = "range"
+SUBSET = "subset"
+BOOLEAN = "boolean"
+KINDS = (LABEL, RANGE, SUBSET, BOOLEAN)
+
+MAX_BOOL_VARS = 20  # distance table is 2**L floats; 20 -> 4 MiB per query.
+
+
+# ---------------------------------------------------------------------------
+# bit packing helpers
+# ---------------------------------------------------------------------------
+
+def n_words(n_bits: int) -> int:
+    return (int(n_bits) + 31) // 32
+
+
+def pack_bits(bits: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+    """Pack a boolean array [..., L] into uint32 words [..., ceil(L/32)]."""
+    bits = jnp.asarray(bits, dtype=jnp.uint32)
+    L = bits.shape[-1]
+    W = n_words(L)
+    pad = W * 32 - L
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
+    bits = bits.reshape(bits.shape[:-1] + (W, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Unpack uint32 words [..., W] into boolean [..., L]."""
+    words = jnp.asarray(words, dtype=jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    return bits[..., :L].astype(jnp.bool_)
+
+
+def popcount(x: jnp.ndarray) -> jnp.ndarray:
+    """Population count of an unsigned integer array, summed over last axis."""
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# attribute table (per-point metadata)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("data",), meta_fields=("kind", "n_bits"))
+@dataclasses.dataclass(frozen=True)
+class AttrTable:
+    """Per-point attributes for one dataset.
+
+    data layout per kind:
+      label   : {"label": int32[N]}
+      range   : {"value": float32[N]}
+      subset  : {"bits": uint32[N, W]}  (+ optional "bit_weights": f32[L] for
+                the YFCC-style log(1/p_i) weighted attribute distance, D.3)
+      boolean : {"assign": uint32[N]}
+    """
+    kind: str
+    data: Dict[str, jnp.ndarray]
+    n_bits: int = 0  # L for subset/boolean kinds
+
+    @property
+    def n(self) -> int:
+        return next(iter(self.data.values())).shape[0]
+
+    def gather(self, ids: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Gather attribute rows for (clipped) candidate ids of any shape."""
+        out = {}
+        for k, v in self.data.items():
+            if k == "bit_weights":  # global, not per-point
+                out[k] = v
+            else:
+                out[k] = jnp.take(v, ids, axis=0, mode="clip")
+        return out
+
+
+def label_table(labels) -> AttrTable:
+    return AttrTable(LABEL, {"label": jnp.asarray(labels, jnp.int32)})
+
+
+def range_table(values) -> AttrTable:
+    return AttrTable(RANGE, {"value": jnp.asarray(values, jnp.float32)})
+
+
+def subset_table(bits, n_bits: int, bit_weights=None) -> AttrTable:
+    """``bits``: either packed uint32 [N, W] or boolean [N, L]."""
+    bits = jnp.asarray(bits)
+    if bits.dtype != jnp.uint32:
+        bits = pack_bits(bits)
+    data = {"bits": bits}
+    if bit_weights is not None:
+        data["bit_weights"] = jnp.asarray(bit_weights, jnp.float32)
+    return AttrTable(SUBSET, data, n_bits=int(n_bits))
+
+
+def boolean_table(assign, n_vars: int) -> AttrTable:
+    assert n_vars <= MAX_BOOL_VARS
+    return AttrTable(BOOLEAN, {"assign": jnp.asarray(assign, jnp.uint32)},
+                     n_bits=int(n_vars))
+
+
+# ---------------------------------------------------------------------------
+# filter batch (per-query constraints)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("data",), meta_fields=("kind", "n_bits"))
+@dataclasses.dataclass(frozen=True)
+class FilterBatch:
+    """A batch of B query filters.
+
+    data layout per kind:
+      label   : {"label": int32[B]}
+      range   : {"lo": f32[B], "hi": f32[B]}
+      subset  : {"bits": uint32[B, W]}
+      boolean : {"table": f32[B, 2**L]}   # dist_F lookup table per query
+                {"sat":   bool[B, 2**L]}  # exact satisfaction, for recall eval
+    """
+    kind: str
+    data: Dict[str, jnp.ndarray]
+    n_bits: int = 0
+
+    @property
+    def batch(self) -> int:
+        return next(iter(self.data.values())).shape[0]
+
+    def lane(self, i: int) -> "FilterBatch":
+        return FilterBatch(self.kind,
+                           {k: v[i:i + 1] for k, v in self.data.items()},
+                           self.n_bits)
+
+
+def label_filters(labels) -> FilterBatch:
+    return FilterBatch(LABEL, {"label": jnp.asarray(labels, jnp.int32)})
+
+
+def range_filters(lo, hi) -> FilterBatch:
+    return FilterBatch(RANGE, {"lo": jnp.asarray(lo, jnp.float32),
+                               "hi": jnp.asarray(hi, jnp.float32)})
+
+
+def subset_filters(bits, n_bits: int) -> FilterBatch:
+    bits = jnp.asarray(bits)
+    if bits.dtype != jnp.uint32:
+        bits = pack_bits(bits)
+    return FilterBatch(SUBSET, {"bits": bits}, n_bits=int(n_bits))
+
+
+def bool_dist_table(sat: jnp.ndarray, n_vars: int) -> jnp.ndarray:
+    """Hamming distance-to-satisfying-set over {0,1}^L via min-plus relaxation.
+
+    ``sat``: bool[..., 2**L] marking satisfying assignments. L rounds of
+    relaxation over all single-bit flips computes exact hypercube BFS distance
+    (max distance <= L). Paper §3.1(4): dist_F(a, f) = min_{a': f(a')=1} |a-a'|.
+    """
+    L = int(n_vars)
+    size = 1 << L
+    idx = jnp.arange(size, dtype=jnp.uint32)
+    dist = jnp.where(sat, 0.0, jnp.float32(2 * L + 1))
+
+    def round_(_, d):
+        for i in range(L):
+            nb = jnp.take(d, (idx ^ jnp.uint32(1 << i)).astype(jnp.int32),
+                          axis=-1)
+            d = jnp.minimum(d, nb + 1.0)
+        return d
+
+    dist = jax.lax.fori_loop(0, L, round_, dist)
+    return dist
+
+
+def boolean_filters(sat: jnp.ndarray, n_vars: int) -> FilterBatch:
+    """``sat``: bool[B, 2**L] truth tables of the boolean predicates."""
+    sat = jnp.asarray(sat, jnp.bool_)
+    table = bool_dist_table(sat, n_vars)
+    return FilterBatch(BOOLEAN, {"table": table, "sat": sat},
+                       n_bits=int(n_vars))
+
+
+# ---------------------------------------------------------------------------
+# exact pass/fail (the binary g(a, f)), used for recall + pre/post filtering
+# ---------------------------------------------------------------------------
+
+def matches(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """g(a_p, f_q) = 1. ``attrs`` gathered to shape [B, C, ...]; filt is [B].
+
+    Returns bool[B, C].
+    """
+    k = filt.kind
+    if k == LABEL:
+        return attrs["label"] == filt.data["label"][:, None]
+    if k == RANGE:
+        v = attrs["value"]
+        return ((v >= filt.data["lo"][:, None]) &
+                (v <= filt.data["hi"][:, None]))
+    if k == SUBSET:
+        f = filt.data["bits"][:, None, :]
+        a = attrs["bits"]
+        return jnp.all((f & ~a) == 0, axis=-1)
+    if k == BOOLEAN:
+        a = attrs["assign"].astype(jnp.int32)
+        return jnp.take_along_axis(filt.data["sat"], a, axis=-1)
+    raise ValueError(k)
+
+
+def matches_all(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
+    """Full validity matrix bool[B, N] (used by pre-filter / ground truth)."""
+    ids = jnp.arange(table.n)
+    attrs = table.gather(ids)  # [N, ...]
+    attrs = {k: (v[None] if k != "bit_weights" else v)
+             for k, v in attrs.items()}
+    # broadcast [1, N, ...] vs filter [B] -> [B, N]
+    k = filt.kind
+    if k == LABEL:
+        return attrs["label"] == filt.data["label"][:, None]
+    if k == RANGE:
+        v = attrs["value"]
+        return ((v >= filt.data["lo"][:, None]) &
+                (v <= filt.data["hi"][:, None]))
+    if k == SUBSET:
+        f = filt.data["bits"][:, None, :]
+        a = attrs["bits"]
+        return jnp.all((f & ~a) == 0, axis=-1)
+    if k == BOOLEAN:
+        a = jnp.broadcast_to(attrs["assign"].astype(jnp.int32),
+                             (filt.batch, table.n))
+        return jnp.take_along_axis(filt.data["sat"], a, axis=-1)
+    raise ValueError(k)
+
+
+def selectivity(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
+    return jnp.mean(matches_all(filt, table).astype(jnp.float32), axis=-1)

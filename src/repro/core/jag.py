@@ -1,0 +1,217 @@
+"""Public JAG index API: Threshold-JAG (default) and Weight-JAG (§3.3, §3.4).
+
+Thresholds/weights are specified as *quantiles* of the empirical dist_A
+distribution (paper D.3: sample |V|=500 points, take quantiles from
+{100%, 10%, 1%, 0.1%, 0%}) and calibrated to absolute values at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .beam_search import SearchResult, greedy_search
+from .build import BuildConfig, build_graph, medoid
+from .distances import dist_a, query_key_fn, sq_norms, unfiltered_key_fn
+from .filters import AttrTable, FilterBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class JAGConfig:
+    degree: int = 32
+    ls_build: int = 64
+    alpha: float = 1.2
+    mode: str = "threshold"                    # "threshold" | "weight"
+    # quantiles of dist_A; 1.0 -> pure-vector edges, 0.0 -> strict-attribute
+    threshold_quantiles: Tuple[float, ...] = (1.0, 0.01, 0.0)
+    # weight multipliers of h = sigma_vec / sigma_attr (paper D.3)
+    weight_scales: Tuple[float, ...] = (0.0, 1.0)
+    batch_size: int = 128
+    cand_pool: int = 192
+    calib_samples: int = 512
+    seed: int = 0
+    ex_slots: int = 16
+    ov_max: int = 256
+    n_seeds: int = 8                           # multi-seed beam init
+
+
+def calibrate_thresholds(attr: AttrTable, quantiles: Sequence[float],
+                         n_samples: int, seed: int) -> Tuple[float, ...]:
+    """Absolute dist_A caps at the requested quantiles (paper D.3)."""
+    rng = np.random.default_rng(seed)
+    n = attr.n
+    ia = jnp.asarray(rng.integers(0, n, n_samples), jnp.int32)
+    ib = jnp.asarray(rng.integers(0, n, (n_samples, 64)), jnp.int32)
+    da = dist_a(attr.kind, attr.gather(ia), attr.gather(ib))
+    da = np.asarray(da).reshape(-1)
+    out = []
+    for q in quantiles:
+        if q >= 1.0:
+            out.append(float(da.max()) + 1.0)  # cap above max -> pure vector
+        else:
+            out.append(float(np.quantile(da, q)))
+    return tuple(out)
+
+
+def calibrate_weight_unit(xb, attr: AttrTable, n_samples: int,
+                          seed: int) -> float:
+    """h = sigma(dist_vec) / sigma(dist_A) over sampled pairs (paper D.3)."""
+    rng = np.random.default_rng(seed)
+    n = attr.n
+    ia = jnp.asarray(rng.integers(0, n, n_samples), jnp.int32)
+    ib = jnp.asarray(rng.integers(0, n, (n_samples, 16)), jnp.int32)
+    da = np.asarray(dist_a(attr.kind, attr.gather(ia), attr.gather(ib)))
+    va = np.asarray(jnp.take(xb, ia, axis=0), dtype=np.float32)
+    vb = np.asarray(jnp.take(xb, ib.reshape(-1), axis=0),
+                    dtype=np.float32).reshape(n_samples, 16, -1)
+    dv = np.sqrt(np.maximum(
+        ((va[:, None, :] - vb) ** 2).sum(-1), 0.0))
+    sa = float(np.std(da)) or 1.0
+    return float(np.std(dv)) / sa
+
+
+class JAGIndex:
+    """A built Joint Attribute Graph over (vectors, attributes)."""
+
+    def __init__(self, xb, attr: AttrTable, graph, degree, entry,
+                 cfg: JAGConfig, build_cfg: BuildConfig):
+        self.xb = jnp.asarray(xb)
+        self.xb_norm = sq_norms(self.xb)
+        self.attr = attr
+        self.graph = graph
+        self.degree = degree
+        self.entry = entry
+        self.cfg = cfg
+        self.build_cfg = build_cfg
+        self._search_jit = {}
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, xb, attr: AttrTable, cfg: JAGConfig = JAGConfig(),
+              verbose: bool = False) -> "JAGIndex":
+        xb = jnp.asarray(xb)
+        if cfg.mode == "threshold":
+            tvals = calibrate_thresholds(attr, cfg.threshold_quantiles,
+                                         cfg.calib_samples, cfg.seed)
+            wvals = ()
+        else:
+            h = calibrate_weight_unit(xb, attr, cfg.calib_samples, cfg.seed)
+            wvals = tuple(w * h for w in cfg.weight_scales)
+            tvals = ()
+        bcfg = BuildConfig(
+            degree=cfg.degree, ls_build=cfg.ls_build, alpha=cfg.alpha,
+            mode=cfg.mode, thresholds=tvals, weights=wvals,
+            batch_size=cfg.batch_size, cand_pool=cfg.cand_pool,
+            ex_slots=cfg.ex_slots, ov_max=cfg.ov_max)
+        from .build import make_seeds
+        seeds = make_seeds(xb, cfg.n_seeds, cfg.seed)
+        graph, deg, entry = build_graph(xb, attr, bcfg, seed=cfg.seed,
+                                        entry=seeds, verbose=verbose)
+        return cls(xb, attr, graph, deg, entry, cfg, bcfg)
+
+    # -- query (Algorithm 2) ------------------------------------------------
+    def search(self, queries, filt: FilterBatch, k: int = 10,
+               ls: int = 64, max_iters: int = 0) -> SearchResult:
+        """Filtered top-k search under D_F = (dist_F, dist_vec)."""
+        max_iters = max_iters or 2 * ls
+        key = ("f", k, ls, max_iters, filt.kind)
+        if key not in self._search_jit:
+            @jax.jit
+            def run(graph, xb, xb_norm, attr, q, filt, entry):
+                return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                     query_key_fn(filt), ls=ls, k=k,
+                                     max_iters=max_iters)
+            self._search_jit[key] = run
+        return self._search_jit[key](self.graph, self.xb, self.xb_norm,
+                                     self.attr, jnp.asarray(queries), filt,
+                                     self.entry)
+
+    def search_int8(self, queries, filt: FilterBatch, k: int = 10,
+                    ls: int = 64, max_iters: int = 0) -> SearchResult:
+        """Quantized traversal + exact re-rank (beyond-paper; §Perf).
+
+        Graph navigation uses the int8 database (4x less HBM pull per beam
+        expansion); the beam's survivors are re-ranked with full-precision
+        distances so the returned top-k ordering is exact w.r.t. the
+        traversed set.
+        """
+        from .quantized import make_int8_dist_fn, quantize_int8, rerank_exact
+        max_iters = max_iters or 2 * ls
+        if not hasattr(self, "_q8"):
+            xq, scale = quantize_int8(self.xb)
+            xq_norm = jnp.sum((xq.astype(jnp.float32) * scale) ** 2, -1)
+            self._q8 = (xq, scale, xq_norm)
+        xq, scale, xq_norm = self._q8
+        key = ("q8", k, ls, max_iters, filt.kind)
+        if key not in self._search_jit:
+            @jax.jit
+            def run(graph, xq, xq_norm, scale, xb, xb_norm, attr, q, filt,
+                    entry):
+                res = greedy_search(
+                    graph, xq, xq_norm, attr, q, entry,
+                    query_key_fn(filt), ls=ls, k=ls, max_iters=max_iters,
+                    dist_fn=make_int8_dist_fn(scale))
+                i, p, s = rerank_exact(xb, xb_norm, res.ids, res.primary,
+                                       q, k)
+                return SearchResult(i, p, s, res.vlog, res.n_expanded,
+                                    res.n_dist)
+            self._search_jit[key] = run
+        return self._search_jit[key](self.graph, xq, xq_norm, scale,
+                                     self.xb, self.xb_norm, self.attr,
+                                     jnp.asarray(queries), filt,
+                                     self.entry)
+
+    def search_unfiltered(self, queries, k: int = 10, ls: int = 64,
+                          max_iters: int = 0) -> SearchResult:
+        """Pure vector-distance search (used by post-filtering)."""
+        max_iters = max_iters or 2 * ls
+        key = ("u", k, ls, max_iters)
+        if key not in self._search_jit:
+            @jax.jit
+            def run(graph, xb, xb_norm, attr, q, entry):
+                return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                     unfiltered_key_fn(), ls=ls, k=k,
+                                     max_iters=max_iters)
+            self._search_jit[key] = run
+        return self._search_jit[key](self.graph, self.xb, self.xb_norm,
+                                     self.attr, jnp.asarray(queries),
+                                     self.entry)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            xb=np.asarray(self.xb), graph=np.asarray(self.graph),
+            degree=np.asarray(self.degree), entry=np.asarray(self.entry),
+            attr_kind=self.attr.kind, attr_nbits=self.attr.n_bits,
+            cfg=np.frombuffer(repr(dataclasses.asdict(self.cfg)).encode(),
+                              dtype=np.uint8),
+            **{f"attr__{k}": np.asarray(v) for k, v in self.attr.data.items()})
+
+    @classmethod
+    def load(cls, path: str) -> "JAGIndex":
+        z = np.load(path, allow_pickle=False)
+        import ast
+        cfg = JAGConfig(**{
+            k: tuple(v) if isinstance(v, list) else v
+            for k, v in ast.literal_eval(
+                bytes(z["cfg"]).decode()).items()})
+        attr = AttrTable(str(z["attr_kind"]),
+                         {k[len("attr__"):]: jnp.asarray(v)
+                          for k, v in z.items() if k.startswith("attr__")},
+                         n_bits=int(z["attr_nbits"]))
+        return cls(jnp.asarray(z["xb"]), attr, jnp.asarray(z["graph"]),
+                   jnp.asarray(z["degree"]), jnp.asarray(z["entry"]),
+                   cfg, BuildConfig())
+
+    # -- stats ---------------------------------------------------------------
+    def degree_stats(self):
+        d = np.asarray(jnp.sum(self.graph >= 0, axis=1))
+        return dict(mean=float(d.mean()), max=int(d.max()),
+                    min=int(d.min()),
+                    over_budget=int((d > self.cfg.degree).sum()))

@@ -1,0 +1,97 @@
+"""JointRobustPrune (Algorithm 4), batched over B insertion lanes.
+
+For each threshold ``t`` (or weight ``w``) bucket, candidates are sorted by the
+bucket comparator and admitted by an α-RobustPrune scan (Vamana / DiskANN):
+candidate v survives iff no previously-admitted u has
+``α·dist(u, v) < dist(p, v)``  (squared form: ``α²·d2(u,v) < d2(p,v)``).
+
+Paper implementation notes honored (D.3):
+  * a candidate already admitted by an earlier bucket free-rides into the
+    current bucket (counts toward its cap and dominates later candidates)
+    without consuming a new edge;
+  * optional early-exit fill factor (0.9·deg/|T|) used by overflow re-prunes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .distances import INF, capped
+
+
+def _bucket_order(prim: jnp.ndarray, sec: jnp.ndarray) -> jnp.ndarray:
+    """Permutation sorting candidates by (prim, sec) lexicographically."""
+    C = prim.shape[-1]
+    idx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), prim.shape)
+    _, _, perm = jax.lax.sort((prim, sec, idx), num_keys=2)
+    return perm
+
+
+def joint_robust_prune(cand_valid: jnp.ndarray,   # bool [B, C]
+                       d2_p: jnp.ndarray,         # f32 [B, C] dist(p, cand)^2
+                       da_p: jnp.ndarray,         # f32 [B, C] dist_A(p, cand)
+                       pair_d2: jnp.ndarray,      # f32 [B, C, C]
+                       *,
+                       degree: int,
+                       alpha: float,
+                       thresholds: Sequence[float] | None = None,
+                       weights: Sequence[float] | None = None,
+                       fill: float = 1.0) -> jnp.ndarray:
+    """Returns bool[B, C]: which candidates become out-neighbors (<= degree)."""
+    assert (thresholds is None) != (weights is None)
+    buckets = thresholds if thresholds is not None else weights
+    n_buckets = len(buckets)
+    cap = max(1, int(fill * degree / n_buckets))
+    B, C = d2_p.shape
+    alpha2 = jnp.float32(alpha) ** 2
+    rows = jnp.arange(B)
+
+    d2_masked = jnp.where(cand_valid, d2_p, INF)
+    selected = jnp.zeros((B, C), jnp.bool_)
+
+    for b_i, bval in enumerate(buckets):
+        if thresholds is not None:
+            prim = capped(da_p, jnp.float32(bval))
+            sec = d2_masked
+        else:
+            prim = jnp.float32(bval) * da_p + jnp.sqrt(d2_masked)
+            sec = d2_masked
+        prim = jnp.where(cand_valid, prim, INF)
+        perm = _bucket_order(prim, sec)                      # [B, C]
+
+        def admit(j, state):
+            dominated, count, selected = state
+            cidx = perm[:, j]                                # [B]
+            ok = (cand_valid[rows, cidx]
+                  & ~dominated[rows, cidx]
+                  & (count < cap))
+            selected = selected.at[rows, cidx].set(
+                selected[rows, cidx] | ok)
+            # v_j dominates k iff alpha^2 * d2(v_j, k) < d2(p, k)
+            pd = jnp.take_along_axis(
+                pair_d2, cidx[:, None, None], axis=1)[:, 0, :]  # [B, C]
+            dom_j = (alpha2 * pd < d2_masked)
+            dominated = dominated | (ok[:, None] & dom_j)
+            return dominated, count + ok.astype(jnp.int32), selected
+
+        dominated = jnp.zeros((B, C), jnp.bool_)
+        count = jnp.zeros((B,), jnp.int32)
+        dominated, count, selected = jax.lax.fori_loop(
+            0, C, admit, (dominated, count, selected))
+
+    return selected
+
+
+def select_to_rows(selected: jnp.ndarray, cand_ids: jnp.ndarray,
+                   d2_p: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """Compact a selection mask into fixed-width id rows [B, degree], -1 pad.
+
+    Survivors are ordered by vector distance (harmless; adjacency order is
+    irrelevant to the algorithms).
+    """
+    key = jnp.where(selected, d2_p, INF)
+    ids = jnp.where(selected, cand_ids, -1)
+    _, out = jax.lax.sort((key, ids), num_keys=1)
+    return out[:, :degree]

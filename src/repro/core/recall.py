@@ -1,0 +1,56 @@
+"""Recall / QPS / distance-computation measurement harness.
+
+recall@k follows the filtered-ANN convention used by the paper's figures:
+for each query, |returned ∩ exact-top-k| / |exact-top-k|, where exact-top-k
+contains only filter-satisfying points (may be < k at low selectivity) and
+returned results must satisfy the filter (primary key == 0 under D_F).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import numpy as np
+
+from .ground_truth import GroundTruth
+
+
+class EvalResult(NamedTuple):
+    recall: float
+    qps: float
+    mean_dist_comps: float
+    per_query_recall: np.ndarray
+
+
+def recall_at_k(result_ids: np.ndarray, result_valid: np.ndarray,
+                gt_ids: np.ndarray) -> np.ndarray:
+    """Per-query recall. gt_ids padded with -1; result_valid masks non-matching
+    returned points (e.g. primary > 0)."""
+    B = gt_ids.shape[0]
+    out = np.ones((B,), np.float64)
+    for b in range(B):
+        gt = set(int(i) for i in gt_ids[b] if i >= 0)
+        if not gt:
+            continue  # vacuous query: recall 1 by convention
+        got = set(int(i) for i, v in zip(result_ids[b], result_valid[b]) if v)
+        out[b] = len(gt & got) / len(gt)
+    return out
+
+
+def evaluate(search_fn: Callable[[], "SearchResult"], gt: GroundTruth,
+             timed_repeats: int = 3) -> EvalResult:
+    """Run a (jitted, warmed) zero-arg search closure; measure recall & QPS."""
+    res = search_fn()
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(timed_repeats):
+        res = search_fn()
+        jax.block_until_ready(res.ids)
+    dt = (time.perf_counter() - t0) / timed_repeats
+    ids = np.asarray(res.ids)
+    valid = np.asarray(res.primary) == 0.0
+    pq = recall_at_k(ids, valid, np.asarray(gt.ids))
+    qps = ids.shape[0] / dt
+    nd = float(np.asarray(res.n_dist).mean()) if hasattr(res, "n_dist") else 0
+    return EvalResult(float(pq.mean()), qps, nd, pq)

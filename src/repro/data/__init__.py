@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic filtered-ANN datasets (paper D.2 setups), LM
+token streams, GNN graphs + samplers, recsys click logs."""

@@ -1,0 +1,4 @@
+"""Distribution substrate: logical-axis sharding rules, collectives helpers,
+fault tolerance."""
+from .sharding import (Rules, make_rules, resolve_spec, tree_shardings,
+                       logical_constraint, use_rules, current_rules)

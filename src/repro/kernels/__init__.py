@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot spots (+ pure-jnp oracles)."""
+from . import ops, ref

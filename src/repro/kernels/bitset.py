@@ -1,0 +1,61 @@
+"""Packed-bitset attribute distance Pallas kernels (popcount on the VPU).
+
+Subset/boolean attribute & filter distances over uint32-packed bitsets
+(DESIGN.md §2): XOR/ANDN + ``lax.population_count`` on (bq, W)x(bn, W)
+VMEM tiles, producing the [B, N] distance matrices used by the subset
+dist_F (|f \\ a|), the Hamming dist_A, and the pre-filter validity scans.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popc(x):
+    return jax.lax.population_count(x)
+
+
+def _make_kernel(op: str):
+    def kernel(a_ref, b_ref, o_ref):
+        a = a_ref[...]                                    # [bq, W]
+        b = b_ref[...]                                    # [bn, W]
+        acc = jnp.zeros((a.shape[0], b.shape[0]), jnp.int32)
+        W = a.shape[1]
+        for w in range(W):  # unrolled: W is small (<= 64 words)
+            if op == "xor":
+                x = a[:, w][:, None] ^ b[:, w][None, :]
+            else:  # "deficit": f & ~a
+                x = a[:, w][:, None] & ~b[:, w][None, :]
+            acc = acc + _popc(x).astype(jnp.int32)
+        o_ref[...] = acc
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op", "bq", "bn", "interpret"))
+def bitset_dist(a: jnp.ndarray, b: jnp.ndarray, *, op: str = "xor",
+                bq: int = 128, bn: int = 128,
+                interpret: bool = False) -> jnp.ndarray:
+    """Bitset distance matrix.
+
+    a uint32 [B, W], b uint32 [N, W] -> int32 [B, N].
+    op="xor": Hamming (dist_A); op="deficit": popcount(a & ~b) = |a \\ b|
+    (dist_F with a=filter bits, b=attribute bits).
+    """
+    B, W = a.shape
+    N, _ = b.shape
+    bq, bn = min(bq, B), min(bn, N)
+    assert B % bq == 0 and N % bn == 0, (B, N, bq, bn)
+    return pl.pallas_call(
+        _make_kernel(op),
+        grid=(B // bq, N // bn),
+        in_specs=[
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        interpret=interpret,
+    )(a, b)

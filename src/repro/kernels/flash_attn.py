@@ -1,0 +1,108 @@
+"""Causal GQA flash attention Pallas kernel (TPU target, interpret-tested).
+
+For the LM cells' perf-critical layer: online-softmax attention with
+(block_q x block_k) VMEM tiles, fp32 running max/sum scratch, GQA via a
+grouped grid (one grid row per KV head; the G query heads of that group are
+processed in the q tile's head dim). Lower-triangular blocks are skipped by
+masking; the kv grid dim is arranged innermost so the accumulator lives in
+VMEM scratch across kv steps.
+
+Grid: (B * Hkv * G, Tq/block_q, Tk/block_k).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int,
+            n_kblk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, d]
+    s = q @ k.T                                       # [bq, bk]
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kblk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [B, H, Tq, D]; k/v [B, Hkv, Tk, D]; H % Hkv == 0. -> [B, H, Tq, D].
+
+    Tq/Tk must be divisible by the block sizes (ops-level callers pad).
+    """
+    B, H, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert H % Hkv == 0
+    G = H // Hkv
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0
+    n_kblk = Tk // bk
+    scale = 1.0 / math.sqrt(D)
+
+    # flatten (B, H) -> grid rows; kv row = qh // G
+    qf = q.reshape(B * H, Tq, D)
+    kf = k.reshape(B * Hkv, Tk, D)
+    vf = v.reshape(B * Hkv, Tk, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          block_q=bq, block_k=bk, n_kblk=n_kblk),
+        grid=(B * H, Tq // bq, n_kblk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda h, i, j, G=G: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda h, i, j, G=G: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Tq, D)

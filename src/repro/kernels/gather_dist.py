@@ -1,0 +1,95 @@
+"""Fused gather + squared-L2 distance Pallas kernel (scalar prefetch).
+
+The TPU-native answer to graph pointer-chasing (DESIGN.md §2): neighbor ids
+are scalar-prefetched so the ``BlockSpec.index_map`` selects which database
+row block the DMA engine fetches HBM->VMEM for each grid step; the distance
+reduction runs on the resident tile, so gathered rows never round-trip
+through HBM. This is the beam-search expansion hot spot (the paper's
+"distance computations" metric, Figs. 10-13).
+
+Two granularities:
+  gather_dist      — one grid step per (b, c) id; block = a single (1, d)
+                     row selected by ``ids[g]``. Exact gather semantics.
+  gather_dist_tile — one grid step per query lane; the lane's C ids must
+                     point into a contiguous [C-aligned] region (used by the
+                     sorted/bucketed layouts produced at build time), letting
+                     the DMA fetch a (C, d) tile in one shot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _row_kernel(ids_ref, x_ref, q_ref, o_ref):
+    diff = x_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(diff * diff, axis=-1, keepdims=True).T
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_dist(xb: jnp.ndarray, ids: jnp.ndarray, q: jnp.ndarray,
+                *, interpret: bool = False) -> jnp.ndarray:
+    """xb [N, d], ids int32 [B, C] (pre-clipped to [0, N)), q [B, d]
+    -> f32 [B, C]: ||q[b] - xb[ids[b, c]]||^2."""
+    N, d = xb.shape
+    B, C = ids.shape
+    flat = ids.reshape(-1)
+    total = flat.shape[0]
+
+    out = pl.pallas_call(
+        _row_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(total,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda g, ids: (ids[g], 0)),
+                pl.BlockSpec((1, d), lambda g, ids: (g // C, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda g, ids: (0, g)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, total), jnp.float32),
+        interpret=interpret,
+    )(flat, xb, q)
+    return out.reshape(B, C)
+
+
+def _tile_kernel(base_ref, x_ref, q_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)            # [C, d]
+    q = q_ref[...].astype(jnp.float32)            # [1, d]
+    o_ref[...] = (jnp.sum(x * x, axis=-1)[None, :]
+                  - 2.0 * (q @ x.T)
+                  + jnp.sum(q * q, axis=-1, keepdims=True))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def gather_dist_tile(xb: jnp.ndarray, base: jnp.ndarray, q: jnp.ndarray,
+                     *, tile: int, interpret: bool = False) -> jnp.ndarray:
+    """Tile-granular fused gather+distance.
+
+    ``base`` int32 [B]: tile index per query lane; lane b scores database
+    rows [base[b]*tile, (base[b]+1)*tile) against q[b]. xb's row count must
+    be divisible by ``tile``. Returns f32 [B, tile].
+    """
+    N, d = xb.shape
+    B = base.shape[0]
+    assert N % tile == 0
+
+    out = pl.pallas_call(
+        _tile_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B,),
+            in_specs=[
+                pl.BlockSpec((tile, d), lambda b, base: (base[b], 0)),
+                pl.BlockSpec((1, d), lambda b, base: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, tile), lambda b, base: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, tile), jnp.float32),
+        interpret=interpret,
+    )(base, xb, q)
+    return jnp.maximum(out, 0.0)

@@ -1,0 +1,67 @@
+"""Blocked squared-L2 distance matrix Pallas kernel (MXU formulation).
+
+The filtered-ANN hot spot the paper measures ("distance computations",
+Figs. 10-13). Used by the pre-filter brute-force scan, prune pairwise
+distances, and the recsys ``retrieval_cand`` scoring path.
+
+Grid: (B/bq, N/bn, d/bd). Each step loads a (bq, bd) query tile and a
+(bn, bd) database tile into VMEM, accumulates -2*q@x^T on the MXU into the
+f32 output tile, and on the last d-step adds ||q||^2 + ||x||^2 computed
+from the resident tiles. Tile defaults are MXU/VPU aligned (multiples of
+8x128 for f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, x_ref, o_ref, acc_ref, *, n_dblk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # [bq, bd]
+    x = x_ref[...].astype(jnp.float32)            # [bn, bd]
+    acc_ref[...] += (
+        -2.0 * jax.lax.dot_general(
+            q, x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        + jnp.sum(q * q, axis=1, keepdims=True)
+        + jnp.sum(x * x, axis=1)[None, :])
+
+    @pl.when(pl.program_id(2) == n_dblk - 1)
+    def _done():
+        o_ref[...] = jnp.maximum(acc_ref[...], 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bn", "bd", "interpret"))
+def l2dist(q: jnp.ndarray, xb: jnp.ndarray, *, bq: int = 128, bn: int = 256,
+           bd: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """Squared L2 distances. q [B, d], xb [N, d] -> f32 [B, N].
+
+    B, N, d must be divisible by the tile sizes (callers pad; see ops.py).
+    """
+    B, d = q.shape
+    N, _ = xb.shape
+    bq, bn, bd = min(bq, B), min(bn, N), min(bd, d)
+    assert B % bq == 0 and N % bn == 0 and d % bd == 0, (B, N, d, bq, bn, bd)
+    n_dblk = d // bd
+    grid = (B // bq, N // bn, n_dblk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_dblk=n_dblk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j, kd: (i, kd)),
+            pl.BlockSpec((bn, bd), lambda i, j, kd: (j, kd)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, kd: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32)],
+        interpret=interpret,
+    )(q, xb)

@@ -1,0 +1,105 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode; on TPU the
+same calls compile to Mosaic. ``interpret`` auto-detects from the default
+backend, overridable via argument or ``repro_force_interpret()``. Wrappers
+pad inputs to tile multiples and slice results back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bitset as _bitset
+from . import gather_dist as _gd
+from . import l2dist as _l2
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def repro_force_interpret(v: bool | None) -> None:
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = v
+
+
+def _interp(explicit: bool | None) -> bool:
+    if explicit is not None:
+        return explicit
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def l2dist(q, xb, *, bq: int = 128, bn: int = 256, bd: int = 128,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """Padded/sliced blocked distance matrix [B, N] (see l2dist.py)."""
+    q = jnp.asarray(q)
+    xb = jnp.asarray(xb)
+    qp, B = _pad_to(q, 0, min(bq, max(q.shape[0], 1)))
+    qp, _ = _pad_to(qp, 1, 8)
+    xp, N = _pad_to(xb, 0, min(bn, max(xb.shape[0], 1)))
+    xp, _ = _pad_to(xp, 1, 8)
+    bq2 = min(bq, qp.shape[0])
+    bn2 = min(bn, xp.shape[0])
+    bd2 = min(bd, qp.shape[1])
+    qp, _ = _pad_to(qp, 0, bq2)
+    xp, _ = _pad_to(xp, 0, bn2)
+    qp, _ = _pad_to(qp, 1, bd2)
+    xp, _ = _pad_to(xp, 1, bd2)
+    out = _l2.l2dist(qp, xp, bq=bq2, bn=bn2, bd=bd2,
+                     interpret=_interp(interpret))
+    return out[:B, :N]
+
+
+def gather_dist(xb, ids, q, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Fused gather+distance [B, C] (ids clipped internally)."""
+    ids = jnp.clip(jnp.asarray(ids, jnp.int32), 0, xb.shape[0] - 1)
+    return _gd.gather_dist(jnp.asarray(xb), ids, jnp.asarray(q),
+                           interpret=_interp(interpret))
+
+
+def gather_dist_tile(xb, base, q, *, tile: int,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    return _gd.gather_dist_tile(jnp.asarray(xb), jnp.asarray(base, jnp.int32),
+                                jnp.asarray(q), tile=tile,
+                                interpret=_interp(interpret))
+
+
+def hamming(a, b, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Packed Hamming distance matrix [B, N]."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    ap, B = _pad_to(a, 0, min(128, max(a.shape[0], 1)))
+    bp, N = _pad_to(b, 0, min(128, max(b.shape[0], 1)))
+    bq = min(128, ap.shape[0])
+    bn = min(128, bp.shape[0])
+    ap, _ = _pad_to(ap, 0, bq)
+    bp, _ = _pad_to(bp, 0, bn)
+    return _bitset.bitset_dist(ap, bp, op="xor", bq=bq, bn=bn,
+                               interpret=_interp(interpret))[:B, :N]
+
+
+def subset_deficit(f, a, *, interpret: bool | None = None) -> jnp.ndarray:
+    """|f \\ a| matrix [B, N] (subset dist_F)."""
+    f = jnp.asarray(f, jnp.uint32)
+    a = jnp.asarray(a, jnp.uint32)
+    fp, B = _pad_to(f, 0, min(128, max(f.shape[0], 1)))
+    ap, N = _pad_to(a, 0, min(128, max(a.shape[0], 1)))
+    bq = min(128, fp.shape[0])
+    bn = min(128, ap.shape[0])
+    fp, _ = _pad_to(fp, 0, bq)
+    ap, _ = _pad_to(ap, 0, bn)
+    return _bitset.bitset_dist(fp, ap, op="deficit", bq=bq, bn=bn,
+                               interpret=_interp(interpret))[:B, :N]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2dist_ref(q: jnp.ndarray, xb: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distance matrix. q [B, d], xb [N, d] -> f32 [B, N]."""
+    q = q.astype(jnp.float32)
+    xb = xb.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    xn = jnp.sum(xb * xb, axis=-1)
+    return jnp.maximum(qn + xn[None, :] - 2.0 * q @ xb.T, 0.0)
+
+
+def gather_dist_ref(xb: jnp.ndarray, ids: jnp.ndarray,
+                    q: jnp.ndarray) -> jnp.ndarray:
+    """Fused gather+distance. xb [N, d], ids int32 [B, C], q [B, d]
+    -> f32 [B, C] squared L2 of q[b] vs xb[ids[b, c]] (ids pre-clipped)."""
+    rows = jnp.take(xb, ids, axis=0).astype(jnp.float32)
+    diff = rows - q.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def hamming_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Packed-bitset Hamming distance matrix.
+    a uint32 [B, W], b uint32 [N, W] -> int32 [B, N]."""
+    x = a[:, None, :] ^ b[None, :, :]
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+def subset_deficit_ref(f: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """|f \\ a| (paper's subset dist_F) matrix.
+    f uint32 [B, W], a uint32 [N, W] -> int32 [B, N]."""
+    x = f[:, None, :] & ~a[None, :, :]
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Reference MHA. q [B, H, Tq, D], k/v [B, Hkv, Tk, D] (GQA broadcast)."""
+    B, H, Tq, D = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Tk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Parse compiled/lowered HLO text for per-device collective bytes.
+
+cost_analysis() has no collective accounting, so we regex the HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and sum their operand sizes (the per-device program implies per-chip
+bytes). Shapes are parsed from the result type, e.g. ``bf16[8,128]{1,0}``;
+for all-gather the *operand* (pre-gather) size is what crosses the link per
+step of the ring, so we conservatively report result bytes for gather-type
+ops and operand bytes otherwise — both are recorded.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[128,256]{1,0} all-reduce(...)
+#       %cp = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute(...)
+_RE_KIND = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of collective result bytes per op kind (per-device program)."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _RE_KIND.search(line)
+        if not m:
+            continue
+        kind, suffix = m.groups()
+        if suffix == "-done":
+            continue  # counted at -start
+        head = line[:m.start()]
+        if "=" not in head:
+            continue  # an operand reference, not a definition
+        head = head.split("=", 1)[1]  # result type(s) only
+        size = sum(_bytes_of(d, s) for d, s in _RE_SHAPE.findall(head))
+        out[kind] += size
+        out["total"] += size
+    return dict(out)
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Rough opcode histogram (fusion-level) for redundancy eyeballing."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*\S+\s+([a-z][a-z0-9-]*)\(", hlo_text):
+        out[m.group(1)] += 1
+    return dict(out)

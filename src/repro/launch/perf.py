@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimb harness: lower named variants of the three chosen cells
+and report the roofline-term deltas vs baseline.
+
+  PYTHONPATH=src python -m repro.launch.perf --cell jag_serve
+  PYTHONPATH=src python -m repro.launch.perf --cell qwen3_train
+  PYTHONPATH=src python -m repro.launch.perf --cell maverick_train
+
+Each variant is a hypothesis -> change pair documented in EXPERIMENTS.md
+§Perf; this harness produces the before/after measurements.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import make_cell
+from ..configs.shapes import JAG_SHAPES
+from ..distributed.sharding import use_rules, make_rules
+from .dryrun import _compile
+from .mesh import make_production_mesh
+from . import roofline as RL
+
+
+def _report(tag, mesh, cell, model_flops=None, flops_scale=None,
+            analytic=None):
+    compiled = _compile(cell, mesh)
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    r = RL.analyze(tag, "-", "single", n_chips, compiled,
+                   model_flops if model_flops is not None
+                   else cell["model_flops"],
+                   flops_scale=(flops_scale if flops_scale is not None
+                                else cell.get("flops_scale", 1.0)),
+                   analytic_only=(analytic if analytic is not None
+                                  else cell.get("analytic_only", False)))
+    print(RL.format_row(r), flush=True)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# JAG serve_1b variants
+# ---------------------------------------------------------------------------
+
+def jag_serve_variants(out):
+    from ..core.distributed import ShardedServeConfig, make_serve_step
+    mesh = make_production_mesh()
+    rules = make_rules(mesh)
+    shp = JAG_SHAPES["serve_1b"]
+    S = 256
+    n_loc, d, W, Bq = shp["n_local"], shp["d"], shp["row_width"], shp["batch"]
+    scfg = ShardedServeConfig(k=shp["k"], ls=shp["ls"],
+                              max_iters=shp["max_iters"],
+                              query_chunk=shp["query_chunk"])
+    nch = Bq // shp["query_chunk"]
+    scale_f = nch * shp["max_iters"]
+    sds = jax.ShapeDtypeStruct
+    shard = NamedSharding(mesh, P(("data", "model")))
+    rep = NamedSharding(mesh, P())
+
+    def args_for(vdtype, with_scale):
+        a = [sds((S, n_loc, W), jnp.int32),
+             sds((S, n_loc, d), vdtype),
+             sds((S, n_loc), jnp.float32),
+             {"value": sds((S, n_loc), jnp.float32)},
+             sds((S, shp["n_seeds"]), jnp.int32),
+             sds((Bq, d), jnp.bfloat16),
+             {"lo": sds((Bq,), jnp.float32), "hi": sds((Bq,), jnp.float32)}]
+        sh = [shard, shard, shard, {"value": shard}, shard, rep,
+              {"lo": rep, "hi": rep}]
+        if with_scale:
+            a.append(sds((d,), jnp.float32))
+            sh.append(rep)
+        return tuple(a), tuple(sh)
+
+    mf = Bq * S * shp["max_iters"] * W * d * 2
+    variants = [
+        ("baseline(bf16,bitmap)", "f32", "bitmap", jnp.bfloat16, False, W),
+        ("v1:int8", "int8", "bitmap", jnp.int8, True, W),
+        ("v2:int8+scan-dedup", "int8", "scan", jnp.int8, True, W),
+        ("v3:int8+scan+reg-norm", "int8_reg", "scan", jnp.int8, True, W),
+        # v4: serve-time adjacency truncated to R=64 (the EX spare build
+        # columns are all -1 after finalize, so this is semantics-free)
+        ("v4:int8+scan+W64", "int8", "scan", jnp.int8, True, 64),
+    ]
+    for tag, variant, dedup, dt, wsc, Wv in variants:
+        def args_w(vdtype, with_scale, Wv=Wv):
+            a = [sds((S, n_loc, Wv), jnp.int32),
+                 sds((S, n_loc, d), vdtype),
+                 sds((S, n_loc), jnp.float32),
+                 {"value": sds((S, n_loc), jnp.float32)},
+                 sds((S, shp["n_seeds"]), jnp.int32),
+                 sds((Bq, d), jnp.bfloat16),
+                 {"lo": sds((Bq,), jnp.float32),
+                  "hi": sds((Bq,), jnp.float32)}]
+            sh = [shard, shard, shard, {"value": shard}, shard, rep,
+                  {"lo": rep, "hi": rep}]
+            if with_scale:
+                a.append(sds((d,), jnp.float32))
+                sh.append(rep)
+            return tuple(a), tuple(sh)
+
+        fn = make_serve_step(mesh, scfg, "range", "range",
+                             variant=variant, dedup=dedup)
+        args, sh = args_w(dt, wsc)
+        cell = dict(fn=fn, args=args, in_shardings=sh, out_shardings=None,
+                    donate_argnums=(), rules=rules, model_flops=mf,
+                    flops_scale=scale_f)
+        out.append(_report(f"jag_serve/{tag}", mesh, cell))
+
+
+# ---------------------------------------------------------------------------
+# LM train variants
+# ---------------------------------------------------------------------------
+
+def lm_train_variants(arch, out):
+    mesh = make_production_mesh()
+
+    def with_cfg(**kw):
+        import repro.configs.registry as REG
+        from ..configs import get
+        spec = get(arch)
+        orig = spec.make_config
+        cell = [None]
+
+        def patched(shape=None):
+            return dataclasses.replace(orig(shape), **kw)
+        object.__setattr__(spec, "make_config", patched)
+        try:
+            cell[0] = make_cell(arch, "train_4k", mesh, lowering="unroll")
+        finally:
+            object.__setattr__(spec, "make_config", orig)
+        return cell[0]
+
+    out.append(_report(f"{arch}/v2:attn_scores_bf16", mesh,
+                       with_cfg(attn_scores_bf16=True)))
+    out.append(_report(f"{arch}/v3:+remat_dots", mesh,
+                       with_cfg(attn_scores_bf16=True,
+                                remat_policy="dots")))
+
+
+def din_train_variants(out):
+    """Cell 3: the most collective-bound baseline cell (embedding gathers
+    over the row-sharded table dominate)."""
+    from ..configs import get
+    mesh = make_production_mesh()
+    arch = "din"
+
+    def cell_with(table_dtype=None, overrides=None):
+        spec = get(arch)
+        orig = spec.make_config
+        if table_dtype is not None:
+            def patched(shape=None):
+                return dataclasses.replace(orig(shape),
+                                           table_dtype=table_dtype)
+            object.__setattr__(spec, "make_config", patched)
+        try:
+            return make_cell(arch, "train_batch", mesh,
+                             rule_overrides=overrides)
+        finally:
+            object.__setattr__(spec, "make_config", orig)
+
+    out.append(_report("din/baseline(f32,rows@data*model)", mesh,
+                       cell_with()))
+    out.append(_report("din/v1:bf16_table", mesh,
+                       cell_with(table_dtype=jnp.bfloat16)))
+    out.append(_report("din/v2:rows@model-only", mesh,
+                       cell_with(overrides={"table_rows": "model"})))
+    out.append(_report("din/v3:bf16+rows@model", mesh,
+                       cell_with(table_dtype=jnp.bfloat16,
+                                 overrides={"table_rows": "model"})))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="jag_serve",
+                    choices=["jag_serve", "qwen3_train", "maverick_train",
+                             "din_train"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = []
+    if args.cell == "jag_serve":
+        jag_serve_variants(rows)
+    elif args.cell == "qwen3_train":
+        lm_train_variants("qwen3-1.7b", rows)
+    elif args.cell == "din_train":
+        din_train_variants(rows)
+    else:
+        lm_train_variants("llama4-maverick-400b-a17b", rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([r.to_dict() for r in rows], f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

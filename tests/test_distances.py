@@ -1,0 +1,126 @@
+"""Unit + property tests for filter/attribute distances (paper §3.1)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filters as F
+from repro.core import distances as D
+
+
+def _as2d(x):
+    return jnp.asarray(x)[None, :]
+
+
+class TestLabel:
+    def test_dist_f_validity(self):
+        filt = F.label_filters([3])
+        attrs = {"label": jnp.asarray([[3, 4, 3, 0]])}
+        df = D.dist_f(filt, attrs)
+        g = F.matches(filt, attrs)
+        np.testing.assert_array_equal(np.asarray(df) == 0, np.asarray(g))
+
+    def test_dist_a(self):
+        a1 = {"label": jnp.asarray([2])}
+        a2 = {"label": jnp.asarray([[2, 5]])}
+        np.testing.assert_array_equal(
+            np.asarray(D.dist_a(F.LABEL, a1, a2)), [[0.0, 1.0]])
+
+
+class TestRange:
+    @given(st.floats(-100, 100), st.floats(0, 50), st.floats(-200, 200))
+    @settings(max_examples=50, deadline=None)
+    def test_validity_consistency(self, lo, width, a):
+        lo, a = np.float32(lo), np.float32(a)
+        hi = np.float32(lo + np.float32(width))
+        filt = F.range_filters([lo], [hi])
+        attrs = {"value": jnp.asarray([[a]], jnp.float32)}
+        df = float(D.dist_f(filt, attrs)[0, 0])
+        inside = bool(lo <= a <= hi)
+        assert (df == 0.0) == inside
+        if not inside:  # distance equals the gap to the nearest boundary
+            gap = float(lo - a) if a < lo else float(a - hi)
+            assert df == pytest.approx(gap, rel=1e-5, abs=1e-3)
+
+    def test_dist_a_metric(self):
+        a1 = {"value": jnp.asarray([1.0])}
+        a2 = {"value": jnp.asarray([[1.0, 4.5, -2.0]])}
+        np.testing.assert_allclose(
+            np.asarray(D.dist_a(F.RANGE, a1, a2)), [[0.0, 3.5, 3.0]])
+
+
+class TestSubset:
+    @given(st.integers(1, 64), st.integers(0, 2 ** 30), st.integers(0, 2 ** 30))
+    @settings(max_examples=50, deadline=None)
+    def test_dist_f_is_deficit(self, L, fa, aa):
+        L = max(L, 31)
+        f = np.array([(fa >> i) & 1 for i in range(L)], bool)
+        a = np.array([(aa >> i) & 1 for i in range(L)], bool)
+        filt = F.subset_filters(f[None], L)
+        attrs = {"bits": F.pack_bits(a[None, None])}
+        df = int(D.dist_f(filt, attrs)[0, 0])
+        assert df == int((f & ~a).sum())
+        assert (df == 0) == bool(F.matches(filt, attrs)[0, 0])
+
+    def test_dist_a_hamming(self):
+        a = np.zeros((2, 40), bool)
+        a[1, :7] = True
+        t = F.subset_table(a, 40)
+        a1 = {k: v[0] for k, v in t.data.items()}
+        a1 = {"bits": t.data["bits"][0:1]}
+        a2 = {"bits": t.data["bits"][None, :, :][0][None].repeat(1, 0)}
+        da = D.dist_a(F.SUBSET, a1, {"bits": t.data["bits"][None]})
+        np.testing.assert_array_equal(np.asarray(da), [[0.0, 7.0]])
+
+    def test_weighted_dist_a(self):
+        bits = np.array([[1, 1, 0], [1, 0, 1]], bool)
+        w = np.array([0.5, 2.0, 1.0], np.float32)
+        t = F.subset_table(bits, 3, bit_weights=w)
+        a1 = {"bits": t.data["bits"][0:1], "bit_weights": t.data["bit_weights"]}
+        a2 = {"bits": t.data["bits"][None], "bit_weights": t.data["bit_weights"]}
+        da = np.asarray(D.dist_a(F.SUBSET, a1, a2))
+        # C = sum(w) = 3.5; overlap(0,0)=2.5 -> 1.0; overlap(0,1)=0.5 -> 3.0
+        np.testing.assert_allclose(da, [[1.0, 3.0]], rtol=1e-6)
+
+
+class TestBoolean:
+    def test_table_is_hypercube_bfs(self):
+        L = 6
+        size = 1 << L
+        rng = np.random.default_rng(0)
+        sat = rng.random(size) < 0.1
+        sat[3] = True
+        table = np.asarray(F.bool_dist_table(jnp.asarray(sat[None]), L))[0]
+        # brute-force reference
+        sat_ids = np.flatnonzero(sat)
+        for a in range(size):
+            ref = min(bin(a ^ s).count("1") for s in sat_ids)
+            assert table[a] == ref, (a, table[a], ref)
+
+    def test_validity(self):
+        L = 5
+        rng = np.random.default_rng(1)
+        sat = rng.random((3, 1 << L)) < 0.3
+        sat[:, 0] = True
+        filt = F.boolean_filters(sat, L)
+        assign = jnp.asarray(rng.integers(0, 1 << L, (3, 8)), jnp.uint32)
+        attrs = {"assign": assign}
+        df = np.asarray(D.dist_f(filt, attrs))
+        g = np.asarray(F.matches(filt, attrs))
+        np.testing.assert_array_equal(df == 0, g)
+
+
+class TestCapped:
+    @given(st.floats(0, 10), st.floats(0, 10))
+    @settings(max_examples=30, deadline=None)
+    def test_capped(self, da, t):
+        c = float(D.capped(jnp.float32(da), jnp.float32(t)))
+        assert c == pytest.approx(max(np.float32(da) - np.float32(t), 0.0),
+                                  rel=1e-6, abs=1e-6)
+
+
+def test_selectivity_matches_bruteforce():
+    from repro.data.synthetic import msturing_subset
+    ds = msturing_subset(n=2000, b=32, seed=3)
+    sel = np.asarray(F.selectivity(ds.filt, ds.attr))
+    np.testing.assert_allclose(sel, ds.selectivity, atol=1e-6)

@@ -1,0 +1,88 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filters as F
+from repro.core import distances as D
+from repro.core.prune import joint_robust_prune
+from repro.train.optimizer import OptConfig, schedule_lr
+
+
+@given(st.integers(1, 2 ** 31 - 1), st.integers(1, 2 ** 31 - 1),
+       st.integers(1, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_hamming_triangle_inequality(a, b, c):
+    """dist_A (boolean/subset Hamming) satisfies the triangle inequality."""
+    ua = {"assign": jnp.asarray([np.uint32(a & 0xFFFFFFFF)])}
+    ub = {"assign": jnp.asarray([[np.uint32(b & 0xFFFFFFFF)]])}
+    uc = {"assign": jnp.asarray([[np.uint32(c & 0xFFFFFFFF)]])}
+    dab = float(D.dist_a(F.BOOLEAN, ua, ub)[0, 0])
+    dac = float(D.dist_a(F.BOOLEAN, ua, uc)[0, 0])
+    ubc = {"assign": jnp.asarray([np.uint32(b & 0xFFFFFFFF)])}
+    dbc = float(D.dist_a(F.BOOLEAN, ubc, uc)[0, 0])
+    assert dab <= dac + dbc + 1e-6
+
+
+@given(st.lists(st.floats(0, 100), min_size=4, max_size=16),
+       st.floats(0.0, 50.0))
+@settings(max_examples=40, deadline=None)
+def test_capped_distance_monotone_in_threshold(vals, t):
+    """Raising t never increases any capped distance (threshold hierarchy:
+    higher-t buckets are strictly more permissive — §3.2)."""
+    da = jnp.asarray(vals, jnp.float32)
+    c1 = D.capped(da, jnp.float32(t))
+    c2 = D.capped(da, jnp.float32(t + 1.0))
+    assert bool(jnp.all(c2 <= c1))
+
+
+@given(st.integers(0, 2 ** 20 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bool_table_validity(a):
+    """dist table is 0 exactly on satisfying assignments."""
+    L = 8
+    rng = np.random.default_rng(a % 97)
+    sat = rng.random(1 << L) < 0.2
+    sat[a % (1 << L)] = True
+    tab = np.asarray(F.bool_dist_table(jnp.asarray(sat[None]), L))[0]
+    assert (tab == 0).sum() == sat.sum()
+    assert tab.max() <= L
+
+
+@given(st.integers(2, 40), st.integers(2, 12), st.floats(1.0, 2.0))
+@settings(max_examples=20, deadline=None)
+def test_prune_never_exceeds_degree(c, deg, alpha):
+    rng = np.random.default_rng(c * 7 + deg)
+    B = 3
+    d2p = jnp.asarray(rng.uniform(0, 10, (B, c)), jnp.float32)
+    da = jnp.asarray(rng.uniform(0, 4, (B, c)), jnp.float32)
+    pair = jnp.asarray(rng.uniform(0, 10, (B, c, c)), jnp.float32)
+    sel = joint_robust_prune(jnp.ones((B, c), bool), d2p, da, pair,
+                             degree=deg, alpha=alpha,
+                             thresholds=(np.inf, 0.0))
+    assert int(jnp.sum(sel, axis=1).max()) <= deg
+    assert int(jnp.sum(sel, axis=1).min()) >= 1
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=30, deadline=None)
+def test_lr_schedules_bounded_and_warmup(step):
+    for sched in ("cosine", "wsd", "linear", "const"):
+        cfg = OptConfig(lr=1e-3, schedule=sched, warmup_steps=100,
+                        total_steps=10_000)
+        lr = float(schedule_lr(cfg, jnp.int32(step % 10_000)))
+        assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+        if step % 10_000 < 10:
+            assert lr <= cfg.lr * (step % 10_000 + 1) / 100 + 1e-9
+
+
+@given(st.integers(1, 63), st.integers(0, 2 ** 30), st.integers(0, 2 ** 30))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(L, x, y):
+    bits = np.array([[(x >> i) & 1 for i in range(L)],
+                     [(y >> i) & 1 for i in range(min(L, 31))]
+                     + [0] * max(L - 31, 0)], bool)
+    packed = F.pack_bits(bits)
+    out = np.asarray(F.unpack_bits(packed, L))
+    np.testing.assert_array_equal(out, bits)

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finite values. The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct; no allocation)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_archs, get
+from repro.data.pipelines import lm_batch, recsys_batch
+from repro.data.graph_sampler import random_graph, batched_molecules
+from repro.train import OptConfig, init_state, make_train_step
+
+ARCHS = sorted(all_archs().keys())
+
+
+def _finite(tree):
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_reduced_one_step(arch_id):
+    spec = get(arch_id)
+    cfg = spec.make_reduced()
+    key = jax.random.PRNGKey(0)
+
+    if spec.family == "lm":
+        from repro.models import transformer as T
+        params, _ = T.init_params(cfg, key)
+        batch = {k: jnp.asarray(v)
+                 for k, v in lm_batch(0, 2, 32, cfg.vocab).items()}
+        step = make_train_step(lambda p, b: T.loss_fn(cfg, p, b),
+                               OptConfig(warmup_steps=1, total_steps=10))
+        p2, opt, metrics = jax.jit(step)(params, init_state(params), batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert _finite(p2)
+        # decode path too
+        cache, _ = T.init_cache(cfg, 2, 40)
+        lg, cache = jax.jit(lambda p, t, c: T.prefill(cfg, p, t, c))(
+            params, batch["tokens"][:, :16], cache)
+        assert lg.shape == (2, cfg.padded_vocab) and _finite(lg)
+        lg2, _ = jax.jit(lambda p, c, t, cur: T.decode_step(cfg, p, c, t,
+                                                            cur))(
+            params, cache, jnp.zeros((2,), jnp.int32),
+            jnp.full((2,), 16, jnp.int32))
+        assert lg2.shape == (2, cfg.padded_vocab) and _finite(lg2)
+
+    elif spec.family == "gnn":
+        from repro.models import gnn as G
+        params, _ = G.init_params(cfg, key)
+        g = random_graph(300, 1500, cfg.d_feat, cfg.n_classes, seed=1)
+        batch = {"feats": jnp.asarray(g.feats),
+                 "edges": jnp.asarray(g.edges),
+                 "labels": jnp.asarray(g.labels),
+                 "label_mask": jnp.ones(300)}
+        step = make_train_step(lambda p, b: G.loss_fn(cfg, p, b),
+                               OptConfig(warmup_steps=1, total_steps=10))
+        p2, _, metrics = jax.jit(step)(params, init_state(params), batch)
+        assert np.isfinite(float(metrics["loss"])) and _finite(p2)
+        mb = batched_molecules(4, 10, 20, cfg.d_feat, cfg.n_classes)
+        loss, _ = jax.jit(lambda p, b: G.graph_loss_fn(cfg, p, b))(
+            params, {k: jnp.asarray(v) for k, v in mb.items()})
+        assert np.isfinite(float(loss))
+
+    elif spec.family == "recsys":
+        from repro.models import recsys as R
+        params, _ = R.init_params(cfg, key)
+        batch = {k: jnp.asarray(v) for k, v in recsys_batch(
+            0, 32, cfg.n_sparse, cfg.vocabs(), n_dense=cfg.n_dense,
+            kind=cfg.kind, seq_len=cfg.seq_len).items()}
+        step = make_train_step(lambda p, b: R.loss_fn(cfg, p, b),
+                               OptConfig(warmup_steps=1, total_steps=10))
+        p2, _, metrics = jax.jit(step)(params, init_state(params), batch)
+        assert np.isfinite(float(metrics["loss"])) and _finite(p2)
+        logits = jax.jit(lambda p, b: R.forward(cfg, p, b))(params, batch)
+        assert logits.shape == (32,) and _finite(logits)
+
+    elif spec.family == "jag":
+        from repro.core import JAGIndex, range_table, range_filters
+        rng = np.random.default_rng(0)
+        xb = rng.normal(size=(600, 16)).astype(np.float32)
+        idx = JAGIndex.build(xb, range_table(rng.uniform(0, 100, 600)), cfg)
+        res = idx.search(xb[:8], range_filters([0] * 8, [100] * 8), k=5,
+                         ls=24)
+        assert res.ids.shape == (8, 5)
+        assert (np.asarray(res.ids)[:, 0] >= 0).all()
+
+
+def test_all_ten_assigned_archs_present():
+    ids = set(ARCHS)
+    expected = {"llama4-maverick-400b-a17b", "llama4-scout-17b-a16e",
+                "minicpm-2b", "gemma-7b", "qwen3-1.7b", "gcn-cora",
+                "deepfm", "din", "fm", "wide-deep", "jag"}
+    assert expected <= ids, expected - ids
+
+
+@pytest.mark.parametrize("arch_id", [a for a in ARCHS
+                                     if get(a).family == "lm"])
+def test_lm_param_counts_match_public_sizes(arch_id):
+    cfg = get(arch_id).make_config()
+    n = cfg.param_count()
+    expected = {"llama4-maverick-400b-a17b": (370e9, 430e9),
+                "llama4-scout-17b-a16e": (95e9, 120e9),
+                "minicpm-2b": (2.0e9, 3.2e9),
+                "gemma-7b": (7.5e9, 9.5e9),
+                "qwen3-1.7b": (1.4e9, 2.2e9)}[arch_id]
+    assert expected[0] < n < expected[1], f"{arch_id}: {n / 1e9:.1f}B"
+    if cfg.n_experts:
+        na = cfg.active_param_count()
+        assert na < 0.2 * n, "MoE active fraction implausible"

@@ -1,0 +1,33 @@
+"""Inject generated tables into EXPERIMENTS.md placeholder markers.
+
+Usage: python tools/finalize_experiments.py
+Idempotent: markers are kept as HTML comments and content between
+<!-- X --> and <!-- /X --> is replaced (or inserted after a bare marker).
+"""
+import re
+import sys
+
+sys.path.insert(0, "tools")
+from render_tables import (bench_section, dryrun_summary, perf_table,
+                           roofline_table)
+
+
+def inject(text: str, marker: str, content: str) -> str:
+    block = f"<!-- {marker} -->\n{content}\n<!-- /{marker} -->"
+    pat = re.compile(f"<!-- {marker} -->.*?<!-- /{marker} -->", re.S)
+    if pat.search(text):
+        return pat.sub(block, text)
+    return text.replace(f"<!-- {marker} -->", block)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    text = inject(text, "DRYRUN_SUMMARY", dryrun_summary())
+    text = inject(text, "ROOFLINE_TABLE", roofline_table())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.json / perf_jag.json /
+bench_output.txt. Usage: python tools/render_tables.py"""
+import json
+import os
+import re
+import sys
+
+HW = dict(peak=197e12, hbm=819e9, link=50e9)
+
+
+EXTRA = ("dryrun_results_widedeep.json", "dryrun_results_minicpm.json",
+         "dryrun_results_qwen3.json", "dryrun_results_extra.json")
+
+
+def _load(path):
+    d = json.load(open(path))
+    seen = {(r["arch"], r["shape"], r["mesh"]) for r in d["results"]}
+    for p in EXTRA:
+        if os.path.exists(p):
+            for r in json.load(open(p))["results"]:
+                key = (r["arch"], r["shape"], r["mesh"])
+                if key not in seen:
+                    d["results"].append(r)
+                    seen.add(key)
+    d["results"].sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return d
+
+
+def roofline_table(path="dryrun_results.json", mesh="single"):
+    d = _load(path)
+    rows = [r for r in d["results"] if r["mesh"] == mesh]
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bottleneck | useful | mem/dev (GiB) |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for r in rows:
+        mem = (f"{r['mem_per_device'] / 2**30:.2f}"
+               if r.get("mem_per_device") else "-")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_comp'] * 1e3:.2f} | "
+            f"{r['t_mem'] * 1e3:.2f} | {r['t_coll'] * 1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.3f} | {mem} |")
+    return "\n".join(out)
+
+
+def dryrun_summary(path="dryrun_results.json"):
+    d = _load(path)
+    ok = d["results"]
+    meshes = {}
+    for r in ok:
+        meshes.setdefault(r["mesh"], []).append(r)
+    lines = [f"- compiled cells: {len(ok)} ok / "
+             f"{len(d['failures'])} failed"]
+    for m, rs in sorted(meshes.items()):
+        fits = sum(1 for r in rs
+                   if (r.get("mem_per_device") or 0) <= 16 * 2**30)
+        lines.append(f"- mesh {m}: {len(rs)} cells, {fits} within "
+                     f"16 GiB/chip")
+    for f in d["failures"]:
+        lines.append(f"- FAILED: {f['arch']} x {f['shape']} x {f['mesh']}: "
+                     f"{f['error'][:140]}")
+    return "\n".join(lines)
+
+
+def perf_table(path="perf_jag.json"):
+    if not os.path.exists(path):
+        return "(pending)"
+    rows = json.load(open(path))
+    out = ["| variant | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "mem/dev (GiB) | mem-term speedup vs baseline |",
+           "|---|---:|---:|---:|---:|---:|"]
+    base = rows[0]["t_mem"]
+    for r in rows:
+        out.append(
+            f"| {r['arch'].split('/')[-1]} | {r['t_comp'] * 1e3:.2f} | "
+            f"{r['t_mem'] * 1e3:.0f} | {r['t_coll'] * 1e3:.2f} | "
+            f"{(r['mem_per_device'] or 0) / 2**30:.2f} | "
+            f"{base / r['t_mem']:.2f}x |")
+    return "\n".join(out)
+
+
+def bench_section(path="bench_output.txt", prefix=""):
+    if not os.path.exists(path):
+        return "(pending)"
+    out = []
+    for line in open(path):
+        if line.startswith(prefix):
+            out.append("    " + line.rstrip())
+    return "\n".join(out) if out else "(pending)"
+
+
+if __name__ == "__main__":
+    what = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if what in ("all", "roofline"):
+        print("### Roofline (single-pod)\n")
+        print(roofline_table())
+    if what in ("all", "summary"):
+        print("\n### Dry-run summary\n")
+        print(dryrun_summary())
+    if what in ("all", "perf"):
+        print("\n### Perf (jag serve)\n")
+        print(perf_table())
