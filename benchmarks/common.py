@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 import jax

@@ -54,6 +54,76 @@ def bench_gather_dist(emit):
          f"gflops={2 * B * C * d / dt / 1e9:.1f} rows_dma={B * C}")
 
 
+def _count_gathers(jitted, *args) -> int:
+    """Number of gather ops in the lowered HLO of ``jitted(*args)``.
+
+    This is the measured per-expansion gather count the CI bench artifact
+    asserts on (one per N-row operand fetched), so the fused layout's
+    one-gather contract can't silently regress while a hardcoded label
+    stays green.
+    """
+    import re
+    txt = jitted.lower(*args).as_text()
+    return sum(1 for line in txt.splitlines()
+               if re.search(r'=\s*"?stablehlo\.gather"?\(', line))
+
+
+def bench_fused_expand(emit):
+    """Fused one-gather serving path vs the default split-layout expansion.
+
+    The fused serving layout (serve/layout.py) packs [vec | norm | attr]
+    into one row so each beam expansion costs ONE gather; the default path
+    gathers the vector matrix, the norm vector, and the attribute table
+    separately. gathers_per_expansion is MEASURED from the lowered HLO of
+    each fetch (not asserted by the code under test) so CI catches a fused
+    path that regresses to multiple gathers.
+    """
+    from repro.core import filters as F
+    from repro.core.distances import gathered_d2, sq_norms
+    from repro.serve import build_layout, make_fetch_fn
+
+    N, d, B, C = 16384, 64, 128, 32
+    rng = np.random.default_rng(7)
+    xb = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)
+    ids = jnp.asarray(rng.integers(0, N, (B, C)), jnp.int32)
+    attr = F.subset_table(
+        jnp.asarray(rng.integers(0, 2, (N, 64)), jnp.bool_), 64)
+    lay = build_layout(xb, attr)
+    xb_norm = sq_norms(xb)
+
+    def two_gather(xb, xb_norm, ids, q, qn):
+        return gathered_d2(xb, xb_norm, ids, q, qn), attr.gather(ids)
+
+    f2 = jax.jit(two_gather)
+    g2 = _count_gathers(f2, xb, xb_norm, ids, q, qn)
+    dt2 = _time(f2, xb, xb_norm, ids, q, qn)
+    emit("kernels/fused_expand_baseline_split_128x32", dt2 * 1e6,
+         f"gathers_per_expansion={g2} rows_dma={g2 * B * C}")
+
+    fetch = jax.jit(make_fetch_fn(lay))
+    g1 = _count_gathers(fetch, ids, q, qn)
+    dt1 = _time(fetch, ids, q, qn)
+    emit("kernels/fused_expand_xla_128x32", dt1 * 1e6,
+         f"gathers_per_expansion={g1} rows_dma={g1 * B * C} "
+         f"row_bytes={lay.packed.shape[1] * 4} speedup_vs_split="
+         f"{dt2 / dt1:.2f}x")
+
+    # Pallas kernel correctness (interpret mode on CPU): one DMA'd packed
+    # row per grid step must match the pure-jnp oracle bit-for-bit on attrs.
+    q_eff, _ = lay.fold_query(q[:8])
+    kd2, kw = ops.fused_expand(lay.packed, ids[:8, :8], q_eff, qn[:8],
+                               d=d, interpret=True)
+    rd2, rw = ref.fused_expand_ref(lay.packed, ids[:8, :8], q_eff, qn[:8],
+                                   d=d)
+    bits = jax.lax.bitcast_convert_type  # NaN-payload-safe word compare
+    emit("kernels/fused_expand_interpret_allclose", 0.0,
+         f"maxerr={float(jnp.max(jnp.abs(kd2 - rd2))):.2e} "
+         f"attr_bits_exact="
+         f"{bool(jnp.all(bits(kw, jnp.uint32) == bits(rw, jnp.uint32)))}")
+
+
 def bench_bitset(emit):
     B, Nn, W = 256, 8192, 4
     rng = np.random.default_rng(2)
@@ -67,4 +137,4 @@ def bench_bitset(emit):
          f"gops={B * Nn * W / dt / 1e9:.2f}")
 
 
-ALL = [bench_l2dist, bench_gather_dist, bench_bitset]
+ALL = [bench_l2dist, bench_gather_dist, bench_fused_expand, bench_bitset]

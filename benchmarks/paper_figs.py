@@ -19,7 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import JAGConfig, JAGIndex
+from repro.core import JAGIndex
 from repro.core import baselines as BL
 from repro.core.ground_truth import exact_filtered_knn
 from repro.core.recall import recall_at_k

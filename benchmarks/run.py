@@ -4,11 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows. Scale knobs via env:
   REPRO_BENCH_FAST=1  -> kernel microbenches only (CI mode; skips the
                          index-build figure benchmarks).
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substr] [--json PATH]
+
+``--json PATH`` additionally writes ``{"rows": [{name, us, derived}, ...]}``
+— the machine-readable form CI uploads as a per-PR build artifact so hot-path
+regressions (e.g. the fused serving kernel) are visible in review.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -19,6 +24,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run benchmarks whose name contains this")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (CI artifact)")
     args = ap.parse_args(argv)
 
     from . import kernels_bench, paper_figs
@@ -29,9 +36,8 @@ def main(argv=None) -> None:
     rows = []
 
     def emit(name, us, derived=""):
-        row = f"{name},{us:.1f},{derived}"
-        rows.append(row)
-        print(row, flush=True)
+        rows.append({"name": name, "us": round(us, 1), "derived": derived})
+        print(f"{name},{us:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -45,6 +51,10 @@ def main(argv=None) -> None:
             emit(f"{bench.__name__}/ERROR", 0.0, "see stderr")
     print(f"# total {time.time() - t0:.0f}s, {len(rows)} rows",
           file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"rows": rows, "total_s": round(time.time() - t0, 1)},
+                      fh, indent=1)
 
 
 if __name__ == "__main__":

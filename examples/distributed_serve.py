@@ -10,16 +10,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import JAGConfig, JAGIndex, range_table, range_filters
+from repro.core import JAGConfig, JAGIndex, range_table
 from repro.core.distributed import ShardedServeConfig, make_serve_step
 
 
 def main():
     n_dev = len(jax.devices())
     model = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
-    mesh = jax.make_mesh(
-        (n_dev // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import mesh_kwargs, set_mesh
+    mesh = jax.make_mesh((n_dev // model, model), ("data", "model"),
+                         **mesh_kwargs(2))
     S = n_dev
     print(f"devices={n_dev} mesh={dict(mesh.shape)} -> {S} index shards")
 
@@ -47,7 +47,7 @@ def main():
     step = jax.jit(make_serve_step(
         mesh, ShardedServeConfig(k=10, ls=48, max_iters=96,
                                  query_chunk=32), "range", "range"))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ids, prim, sec = step(jnp.asarray(graphs), jnp.asarray(xb),
                               jnp.asarray(xbn),
                               {"value": jnp.asarray(vals)},

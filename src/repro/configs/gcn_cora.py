@@ -1,7 +1,6 @@
 """gcn-cora [arXiv:1609.02907]: 2-layer GCN, d_hidden=16, mean/sym-norm
 aggregation. Per-shape d_feat/n_classes follow the assigned shape set
 (cora / reddit-sampled / ogbn-products / molecules)."""
-import dataclasses
 from ..models.gnn import GCNConfig
 from .registry import ArchSpec
 from .shapes import GNN_SHAPES

@@ -15,13 +15,13 @@ from __future__ import annotations
 import dataclasses
 import importlib
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..distributed.sharding import Rules, make_rules, resolve_spec, use_rules
+from ..distributed.sharding import Rules, make_rules, resolve_spec
 from .shapes import GNN_SHAPES, JAG_SHAPES, LM_SHAPES, RECSYS_SHAPES
 
 

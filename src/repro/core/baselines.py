@@ -24,7 +24,6 @@ QPS and distance-computation comparisons against JAG are apples-to-apples.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, Optional
 
 import jax
@@ -32,12 +31,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .beam_search import SearchResult, greedy_search
-from .build import BuildConfig, build_graph
-from .distances import (INF, dist_f, hard_filter_key_fn, query_key_fn,
-                        sq_norms, unfiltered_key_fn)
-from .filters import (AttrTable, FilterBatch, BOOLEAN, LABEL, RANGE, SUBSET,
-                      matches, n_words, pack_bits)
-from .ground_truth import exact_filtered_knn
+from .distances import INF, dist_f, hard_filter_key_fn
+from .filters import (
+    AttrTable,
+    FilterBatch,
+    BOOLEAN,
+    LABEL,
+    RANGE,
+    SUBSET,
+    matches,
+    pack_bits,
+)
 from .jag import JAGConfig, JAGIndex
 
 

@@ -15,8 +15,6 @@ when all lanes are done or after ``max_iters`` expansions.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -75,8 +73,20 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
 
     ``expand_fn(p int32[B]) -> int32[B, C]`` overrides the 1-hop neighbor
     expansion (e.g. the ACORN-style 2-hop baseline); default gathers graph[p].
+
     ``fetch_fn(ids, q32, q_norm) -> (d2, attrs)`` fuses the distance + attr
-    fetch into one row gather (int8/fused-layout serving, §Perf).
+    fetch into one row gather (int8/fused-layout serving, §Perf). Contract:
+    ``ids`` int32[B, C] are candidate ids already clamped to >= 0 (but a
+    conforming fetch must still tolerate/clip out-of-range ids); ``q32``
+    f32[B, d] are the raw queries and ``q_norm`` f32[B] their squared norms.
+    It must return ``d2`` f32[B, C] (squared L2, >= 0) and ``attrs`` — a dict
+    shaped exactly like ``AttrTable.gather(ids)`` so the comparator's
+    ``key_fn`` sees no difference. The fetch is invoked for the seed batch
+    and once per loop iteration; it is the ONLY place candidate rows are
+    read, so its gather count is the per-expansion HBM cost (2 on the
+    default split path, 1 via ``serve.make_fetch_fn`` over the packed
+    [vec | norm | attr] layout). When ``fetch_fn`` is given, ``xb``/
+    ``xb_norm``/``attr`` are untouched (shape-only) and XLA drops them.
     ``dedup``: "bitmap" = packed seen-bits over N (exact, O(N/32) state);
     "scan" = compare against beam ∪ expansion log only (no N-sized state —
     removes the bitmap's HBM traffic; an evicted-unexpanded candidate may be
@@ -84,7 +94,6 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
     """
     N = xb.shape[0]
     B = queries.shape[0]
-    R = graph.shape[1]
     Wn = (N + 31) // 32 if dedup == "bitmap" else 1
     q32 = queries.astype(jnp.float32)
     q_norm = jnp.sum(q32 * q32, axis=-1)

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -93,8 +92,6 @@ def make_insert_step(cfg: BuildConfig):
     @partial(jax.jit, donate_argnums=(0, 1))
     def insert(graph, degree, xb, xb_norm, attr: AttrTable, batch_ids, entry):
         B = batch_ids.shape[0]
-        N = xb.shape[0]
-        rows = jnp.arange(B)
         p_vec = jnp.take(xb, batch_ids, axis=0)
         p_attr = attr.gather(batch_ids)
 

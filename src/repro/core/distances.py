@@ -18,8 +18,7 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from .filters import (AttrTable, FilterBatch, BOOLEAN, LABEL, RANGE, SUBSET,
-                      popcount)
+from .filters import FilterBatch, BOOLEAN, LABEL, RANGE, SUBSET, popcount
 
 INF = jnp.float32(jnp.inf)
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +69,78 @@ def unpack_bits(words: jnp.ndarray, L: int) -> jnp.ndarray:
 def popcount(x: jnp.ndarray) -> jnp.ndarray:
     """Population count of an unsigned integer array, summed over last axis."""
     return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# attr-word codec: per-point attributes <-> f32 "words" for the fused layout
+#
+# The serving row layout (serve/layout.py) packs [vec | norm | attr words]
+# into one contiguous float32 matrix so a single gather per beam expansion
+# fetches everything the comparator needs. Integer attributes are *bitcast*
+# (not value-cast) into the f32 lanes, so the round-trip is exact for
+# arbitrary uint32 payloads (incl. packed subset bitmaps); the only ops ever
+# applied to attr lanes downstream are copies/gathers, which preserve bits.
+# ---------------------------------------------------------------------------
+
+def _u32_to_f32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.uint32),
+                                        jnp.float32)
+
+
+def _f32_to_u32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32),
+                                        jnp.uint32)
+
+
+def attr_word_width(kind: str, n_bits: int = 0) -> int:
+    """Number of f32 attr words per row in the fused serving layout."""
+    if kind in (LABEL, RANGE, BOOLEAN):
+        return 1
+    if kind == SUBSET:
+        return n_words(n_bits)
+    raise ValueError(kind)
+
+
+def pack_attr_words(table: "AttrTable") -> jnp.ndarray:
+    """Encode per-point attributes as f32 words [N, A] (A = attr_word_width).
+
+    label/boolean/subset lanes are bitcast; range values are stored directly
+    (already f32). Inverse of :func:`unpack_attr_words`.
+    """
+    k = table.kind
+    if k == LABEL:
+        return jax.lax.bitcast_convert_type(
+            jnp.asarray(table.data["label"], jnp.int32),
+            jnp.float32)[:, None]
+    if k == RANGE:
+        return table.data["value"].astype(jnp.float32)[:, None]
+    if k == SUBSET:
+        return _u32_to_f32(table.data["bits"])
+    if k == BOOLEAN:
+        return _u32_to_f32(table.data["assign"])[:, None]
+    raise ValueError(k)
+
+
+def unpack_attr_words(kind: str, words: jnp.ndarray, n_bits: int = 0,
+                      bit_weights: Optional[jnp.ndarray] = None
+                      ) -> Dict[str, jnp.ndarray]:
+    """Decode gathered f32 attr words [..., A] back into an attrs dict.
+
+    The result has the same shapes/dtypes ``AttrTable.gather`` would produce
+    for the same ids, so it can feed ``dist_f``/``matches`` unchanged.
+    """
+    if kind == LABEL:
+        return {"label": _f32_to_u32(words[..., 0]).astype(jnp.int32)}
+    if kind == RANGE:
+        return {"value": words[..., 0].astype(jnp.float32)}
+    if kind == SUBSET:
+        out = {"bits": _f32_to_u32(words)}
+        if bit_weights is not None:
+            out["bit_weights"] = bit_weights
+        return out
+    if kind == BOOLEAN:
+        return {"assign": _f32_to_u32(words[..., 0])}
+    raise ValueError(kind)
 
 
 # ---------------------------------------------------------------------------

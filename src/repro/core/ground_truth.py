@@ -33,7 +33,6 @@ def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
     q32 = queries.astype(jnp.float32)
     qn = sq_norms(q32)
     nblk = (N + block - 1) // block
-    Np = nblk * block
 
     top_d = jnp.full((B, k), INF)
     top_i = jnp.full((B, k), -1, jnp.int32)

@@ -7,16 +7,14 @@ distribution (paper D.3: sample |V|=500 points, take quantiles from
 from __future__ import annotations
 
 import dataclasses
-import io
-from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .beam_search import SearchResult, greedy_search
-from .build import BuildConfig, build_graph, medoid
+from .build import BuildConfig, build_graph
 from .distances import dist_a, query_key_fn, sq_norms, unfiltered_key_fn
 from .filters import AttrTable, FilterBatch
 
@@ -89,6 +87,7 @@ class JAGIndex:
         self.cfg = cfg
         self.build_cfg = build_cfg
         self._search_jit = {}
+        self._fused = {}                     # vec_dtype -> serve.FusedLayout
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -114,12 +113,52 @@ class JAGIndex:
                                         entry=seeds, verbose=verbose)
         return cls(xb, attr, graph, deg, entry, cfg, bcfg)
 
+    # -- fused serving layout (serve/) --------------------------------------
+    def fused_layout(self, vec_dtype: str = "f32"):
+        """Build (once) and return the packed [vec|norm|attr] serving layout.
+
+        The f32 layout reproduces the default path's (dist_F, dist_vec) keys
+        bit-for-bit from ONE row gather per beam expansion; the int8 layout
+        additionally shrinks the vector lanes to int8 codes (query-side scale
+        folding). Cached per dtype; persisted by :meth:`save`.
+        """
+        if vec_dtype not in self._fused:
+            from ..serve import build_layout
+            self._fused[vec_dtype] = build_layout(self.xb, self.attr,
+                                                  vec_dtype=vec_dtype)
+        return self._fused[vec_dtype]
+
     # -- query (Algorithm 2) ------------------------------------------------
     def search(self, queries, filt: FilterBatch, k: int = 10,
-               ls: int = 64, max_iters: int = 0) -> SearchResult:
-        """Filtered top-k search under D_F = (dist_F, dist_vec)."""
+               ls: int = 64, max_iters: int = 0,
+               layout: str = "default") -> SearchResult:
+        """Filtered top-k search under D_F = (dist_F, dist_vec).
+
+        ``layout="fused"`` routes beam expansions through the packed serving
+        layout (one gather per expansion via greedy_search's ``fetch_fn``
+        hook) and returns identical ids/keys to the default two-gather path.
+        """
+        if layout not in ("default", "fused"):
+            raise ValueError(f"layout must be 'default' or 'fused', "
+                             f"got {layout!r}")
         max_iters = max_iters or 2 * ls
-        key = ("f", k, ls, max_iters, filt.kind)
+        key = ("f", k, ls, max_iters, filt.kind, layout)
+        if layout == "fused":
+            lay = self.fused_layout("f32")
+            if key not in self._search_jit:
+                from ..serve import make_fetch_fn
+
+                @jax.jit
+                def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
+                    return greedy_search(
+                        graph, xb, xb_norm, attr, q, entry,
+                        query_key_fn(filt), ls=ls, k=k, max_iters=max_iters,
+                        fetch_fn=make_fetch_fn(lay))
+                self._search_jit[key] = run
+            return self._search_jit[key](self.graph, self.xb, self.xb_norm,
+                                         self.attr, lay,
+                                         jnp.asarray(queries), filt,
+                                         self.entry)
         if key not in self._search_jit:
             @jax.jit
             def run(graph, xb, xb_norm, attr, q, filt, entry):
@@ -132,16 +171,44 @@ class JAGIndex:
                                      self.entry)
 
     def search_int8(self, queries, filt: FilterBatch, k: int = 10,
-                    ls: int = 64, max_iters: int = 0) -> SearchResult:
+                    ls: int = 64, max_iters: int = 0,
+                    layout: str = "default") -> SearchResult:
         """Quantized traversal + exact re-rank (beyond-paper; §Perf).
 
         Graph navigation uses the int8 database (4x less HBM pull per beam
         expansion); the beam's survivors are re-ranked with full-precision
         distances so the returned top-k ordering is exact w.r.t. the
-        traversed set.
+        traversed set. ``layout="fused"`` additionally packs
+        [int8 vec | norm | attr] so navigation costs ONE gather per
+        expansion instead of two (the quantized.py §2 layout, realized in
+        serve/layout.py).
         """
         from .quantized import make_int8_dist_fn, quantize_int8, rerank_exact
+        if layout not in ("default", "fused"):
+            raise ValueError(f"layout must be 'default' or 'fused', "
+                             f"got {layout!r}")
         max_iters = max_iters or 2 * ls
+        if layout == "fused":
+            lay = self.fused_layout("int8")
+            key = ("q8-fused", k, ls, max_iters, filt.kind)
+            if key not in self._search_jit:
+                from ..serve import make_fetch_fn
+
+                @jax.jit
+                def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
+                    res = greedy_search(
+                        graph, xb, xb_norm, attr, q, entry,
+                        query_key_fn(filt), ls=ls, k=ls,
+                        max_iters=max_iters, fetch_fn=make_fetch_fn(lay))
+                    i, p, s = rerank_exact(xb, xb_norm, res.ids,
+                                           res.primary, q, k)
+                    return SearchResult(i, p, s, res.vlog, res.n_expanded,
+                                        res.n_dist)
+                self._search_jit[key] = run
+            return self._search_jit[key](self.graph, self.xb, self.xb_norm,
+                                         self.attr, lay,
+                                         jnp.asarray(queries), filt,
+                                         self.entry)
         if not hasattr(self, "_q8"):
             xq, scale = quantize_int8(self.xb)
             xq_norm = jnp.sum((xq.astype(jnp.float32) * scale) ** 2, -1)
@@ -184,6 +251,18 @@ class JAGIndex:
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str) -> None:
+        """Persist the index; built fused layouts ride along losslessly.
+
+        Packed rows are stored as raw uint32 bit patterns (``packed_bits``)
+        because the attr lanes are uint32 payloads bitcast into f32 — a
+        value-level f32 round-trip could canonicalize NaNs and corrupt them.
+        """
+        fused = {}
+        for dt, lay in self._fused.items():
+            fused[f"fused_{dt}__packed_bits"] = (
+                np.asarray(lay.packed).view(np.uint32))
+            fused[f"fused_{dt}__q_scale"] = np.asarray(lay.q_scale)
+            fused[f"fused_{dt}__bit_weights"] = np.asarray(lay.bit_weights)
         np.savez_compressed(
             path,
             xb=np.asarray(self.xb), graph=np.asarray(self.graph),
@@ -191,7 +270,9 @@ class JAGIndex:
             attr_kind=self.attr.kind, attr_nbits=self.attr.n_bits,
             cfg=np.frombuffer(repr(dataclasses.asdict(self.cfg)).encode(),
                               dtype=np.uint8),
-            **{f"attr__{k}": np.asarray(v) for k, v in self.attr.data.items()})
+            **{f"attr__{k}": np.asarray(v)
+               for k, v in self.attr.data.items()},
+            **fused)
 
     @classmethod
     def load(cls, path: str) -> "JAGIndex":
@@ -205,9 +286,19 @@ class JAGIndex:
                          {k[len("attr__"):]: jnp.asarray(v)
                           for k, v in z.items() if k.startswith("attr__")},
                          n_bits=int(z["attr_nbits"]))
-        return cls(jnp.asarray(z["xb"]), attr, jnp.asarray(z["graph"]),
-                   jnp.asarray(z["degree"]), jnp.asarray(z["entry"]),
-                   cfg, BuildConfig())
+        idx = cls(jnp.asarray(z["xb"]), attr, jnp.asarray(z["graph"]),
+                  jnp.asarray(z["degree"]), jnp.asarray(z["entry"]),
+                  cfg, BuildConfig())
+        from ..serve import FusedLayout
+        for dt in ("f32", "int8"):
+            key = f"fused_{dt}__packed_bits"
+            if key in z:
+                idx._fused[dt] = FusedLayout(
+                    jnp.asarray(z[key].view(np.float32)),
+                    jnp.asarray(z[f"fused_{dt}__q_scale"]),
+                    jnp.asarray(z[f"fused_{dt}__bit_weights"]),
+                    attr.kind, attr.n_bits, int(z["xb"].shape[1]), dt)
+        return idx
 
     # -- stats ---------------------------------------------------------------
     def degree_stats(self):

@@ -9,14 +9,19 @@
 2. **fused row layout**: [int8 vec | norm | attr] packed so one gather per
    expansion fetches everything the comparator needs (vector, ||x||²,
    attribute), instead of three separate gathers over N-row operands.
+   This layout is now realized for all four attribute kinds in
+   ``repro.serve`` (layout.py packs the rows — f32 or int8 lanes — and
+   engine.py builds the beam-search ``fetch_fn``); ``JAGIndex.search_int8``
+   with ``layout="fused"`` is the int8 serving entry point. ``fuse_rows``
+   below remains as the single-f32-attr-column special case used by the
+   HLO measurement path.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def quantize_int8(xb: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -6,7 +6,7 @@ order (fault-tolerance requirement): every batch is derived from
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

@@ -18,7 +18,6 @@ distributions, filter selectivity mixes) over clustered Gaussian vectors:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import numpy as np
 

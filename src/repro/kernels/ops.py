@@ -7,12 +7,11 @@ pad inputs to tile multiples and slice results back.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from . import bitset as _bitset
+from . import fused_expand as _fe
 from . import gather_dist as _gd
 from . import l2dist as _l2
 
@@ -68,6 +67,23 @@ def gather_dist(xb, ids, q, *, interpret: bool | None = None) -> jnp.ndarray:
     ids = jnp.clip(jnp.asarray(ids, jnp.int32), 0, xb.shape[0] - 1)
     return _gd.gather_dist(jnp.asarray(xb), ids, jnp.asarray(q),
                            interpret=_interp(interpret))
+
+
+def fused_expand(packed, ids, q, q_norm, *, d: int,
+                 interpret: bool | None = None):
+    """One-gather beam expansion over the fused serving layout.
+
+    ``packed`` f32 [N, d+1+A] rows of [vec | sq-norm | attr words] (see
+    serve/layout.py). Returns (d2 [B, C], attr words [B, C, A]) from a single
+    row gather — the fetch contract of ``beam_search.greedy_search``'s
+    ``fetch_fn`` hook, minus the word decode (filters.unpack_attr_words).
+    ids are clipped internally; q must already be scale-folded for int8 rows.
+    """
+    ids = jnp.clip(jnp.asarray(ids, jnp.int32), 0, packed.shape[0] - 1)
+    return _fe.fused_expand(jnp.asarray(packed, jnp.float32), ids,
+                            jnp.asarray(q, jnp.float32),
+                            jnp.asarray(q_norm, jnp.float32), d=d,
+                            interpret=_interp(interpret))
 
 
 def gather_dist_tile(xb, base, q, *, tile: int,

@@ -23,6 +23,23 @@ def gather_dist_ref(xb: jnp.ndarray, ids: jnp.ndarray,
     return jnp.sum(diff * diff, axis=-1)
 
 
+def fused_expand_ref(packed: jnp.ndarray, ids: jnp.ndarray, q: jnp.ndarray,
+                     q_norm: jnp.ndarray, *, d: int
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused gather + distance + attr fetch over the packed serving layout.
+
+    packed f32 [N, d+1+A] rows of [vec | sq-norm | attr words]; ids int32
+    [B, C] (pre-clipped); q f32 [B, d] (pre-scaled for int8 layouts); q_norm
+    f32 [B] -> (d2 f32 [B, C], attr words f32 [B, C, A])."""
+    rows = jnp.take(packed, ids, axis=0)               # [B, C, d+1+A]
+    vec = rows[..., :d].astype(jnp.float32)
+    norm = rows[..., d]
+    words = rows[..., d + 1:]
+    dots = jnp.einsum("bcd,bd->bc", vec, q.astype(jnp.float32))
+    d2 = jnp.maximum(norm - 2.0 * dots + q_norm[:, None], 0.0)
+    return d2, words
+
+
 def hamming_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Packed-bitset Hamming distance matrix.
     a uint32 [B, W], b uint32 [N, W] -> int32 [B, N]."""

@@ -22,7 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import make_cell
 from ..configs.shapes import JAG_SHAPES
-from ..distributed.sharding import use_rules, make_rules
+from ..distributed.sharding import make_rules
 from .dryrun import _compile
 from .mesh import make_production_mesh
 from . import roofline as RL
@@ -124,7 +124,6 @@ def lm_train_variants(arch, out):
     mesh = make_production_mesh()
 
     def with_cfg(**kw):
-        import repro.configs.registry as REG
         from ..configs import get
         spec = get(arch)
         orig = spec.make_config

@@ -22,11 +22,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs import get
-from ..data.pipelines import lm_batch, recsys_batch
+from ..data.pipelines import lm_batch
 from ..train import OptConfig, init_state, make_train_step
 
 

@@ -6,9 +6,8 @@ convention). No framework dependency (flax/optax unavailable offline).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,7 @@ this is also where the JAG index plugs in (examples/recsys_retrieval_jag).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -500,7 +499,6 @@ def decode_step(cfg: LMConfig, params, cache, token: jnp.ndarray,
     """One decode step. token int32 [B]; cur_pos int32 [B] (cache length).
 
     Returns (logits [B, V], updated cache)."""
-    B = token.shape[0]
     S = cache["k"].shape[2]
     x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)
     x = x * cfg.emb_scale

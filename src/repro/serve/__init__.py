@@ -1,0 +1,8 @@
+"""Fused serving layout subsystem: pack [vec | norm | attr] rows so one
+gather per beam expansion feeds the comparator (layout.py), and build the
+``fetch_fn`` closures that plug it into greedy_search (engine.py)."""
+from .engine import FusedEngine, make_fetch_fn
+from .layout import FusedLayout, build_layout, load_layout, save_layout
+
+__all__ = ["FusedEngine", "FusedLayout", "build_layout", "load_layout",
+           "make_fetch_fn", "save_layout"]

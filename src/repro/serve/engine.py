@@ -1,0 +1,74 @@
+"""Serving engine: turn a FusedLayout into beam-search fetch closures.
+
+``greedy_search`` exposes a ``fetch_fn(ids, q32, q_norm) -> (d2, attrs)``
+hook (core/beam_search.py) that replaces the default two-gather expansion
+(vector gather for distances + attribute-table gather for dist_F). This
+module builds that closure from a packed layout so every expansion is ONE
+row gather.
+
+Two execution paths share the layout:
+
+  * XLA path (default): a single ``jnp.take`` of the packed matrix; HLO then
+    charges one N-row gather operand per expansion. This is what
+    ``JAGIndex.search(..., layout="fused")`` runs everywhere, including CPU.
+  * kernel path: ``kernels/ops.fused_expand`` — the scalar-prefetch Pallas
+    kernel that DMAs each packed row HBM->VMEM once and emits (d2, attr
+    words) from the resident tile. Interpret mode on CPU, Mosaic on TPU.
+
+Both decode attr words with ``FusedLayout.unpack_attrs`` so the returned
+attrs dict is exactly what ``AttrTable.gather`` would have produced.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layout import FusedLayout
+
+
+def make_fetch_fn(layout: FusedLayout, *, use_kernel: bool = False,
+                  interpret: bool | None = None):
+    """Build a ``fetch_fn`` for ``greedy_search`` from a packed layout.
+
+    The closure treats ``layout`` as a captured pytree, so it must be rebuilt
+    if the layout object changes; ``JAGIndex`` instead passes the layout
+    through the jit boundary and calls this inside (donation-friendly).
+    """
+    d = layout.d
+
+    def fetch_fn(ids, q32, q_norm):
+        q_eff = q32 * layout.q_scale[None, :]
+        if use_kernel:
+            d2, words = ops.fused_expand(layout.packed, ids, q_eff, q_norm,
+                                         d=d, interpret=interpret)
+        else:
+            rows = jnp.take(layout.packed, ids, axis=0, mode="clip")
+            dots = jnp.einsum("bcd,bd->bc", rows[..., :d], q_eff)
+            d2 = jnp.maximum(rows[..., d] - 2.0 * dots + q_norm[:, None],
+                             0.0)
+            words = rows[..., d + 1:]
+        return d2, layout.unpack_attrs(words)
+
+    return fetch_fn
+
+
+class FusedEngine:
+    """Thin serving wrapper: a layout + its fetch closure + path metadata.
+
+    ``gathers_per_expansion`` documents the HBM-traffic contract (1 for the
+    fused layout vs 2 for the split vectors+attributes path); benchmarks and
+    CI assert on it so the fused path can't silently regress to two gathers.
+    """
+
+    gathers_per_expansion = 1
+
+    def __init__(self, layout: FusedLayout, *, use_kernel: bool = False,
+                 interpret: bool | None = None):
+        self.layout = layout
+        self.fetch_fn = make_fetch_fn(layout, use_kernel=use_kernel,
+                                      interpret=interpret)
+
+    @property
+    def row_bytes(self) -> int:
+        """HBM bytes pulled per scored candidate (one packed f32 row)."""
+        return int(self.layout.packed.shape[1]) * 4

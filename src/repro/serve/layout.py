@@ -1,0 +1,129 @@
+"""Fused serving row layout: [vec | sq-norm | attr words] in one matrix.
+
+The quantized.py module docstring has long promised a packed row so "one
+gather per expansion fetches everything the comparator needs (vector,
+||x||^2, attribute)"; this module builds it. Each database row is laid out
+contiguously as
+
+    col 0..d-1 : vector lanes — f32 values, or int8 codes widened to f32
+    col d      : squared L2 norm of the (dequantized) vector
+    col d+1..  : attr words (filters.pack_attr_words — bit-exact payloads)
+
+so a beam expansion is ONE row gather (kernels/fused_expand.py on TPU, a
+single ``jnp.take`` under XLA) instead of the default path's two N-row
+gathers (vectors + attribute table).
+
+int8 rows keep the distance math kernel-identical via query scale folding:
+``codes . (q * scale) == dequant(codes) . q``, with the norm lane storing the
+dequantized norm. ``q_scale`` is ones for f32 layouts, so engines can always
+fold unconditionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.filters import AttrTable, pack_attr_words, unpack_attr_words
+
+VEC_DTYPES = ("f32", "int8")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("packed", "q_scale", "bit_weights"),
+         meta_fields=("kind", "n_bits", "d", "vec_dtype"))
+@dataclasses.dataclass(frozen=True)
+class FusedLayout:
+    """A packed serving matrix plus the metadata needed to interpret it.
+
+    packed      : f32 [N, d + 1 + A] rows of [vec | sq-norm | attr words]
+    q_scale     : f32 [d] per-dim query fold factor (ones for f32 rows;
+                  the int8 dequant scale for int8 rows)
+    bit_weights : f32 [L] weighted-subset distances (empty [0] when unused)
+    kind/n_bits : the attribute family of the attr words (filters.KINDS)
+    d           : vector lane count; vec_dtype: "f32" | "int8"
+    """
+    packed: jnp.ndarray
+    q_scale: jnp.ndarray
+    bit_weights: jnp.ndarray
+    kind: str
+    n_bits: int
+    d: int
+    vec_dtype: str
+
+    @property
+    def n(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def n_attr_words(self) -> int:
+        return self.packed.shape[1] - self.d - 1
+
+    def unpack_attrs(self, words: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Decode gathered attr words [..., A] into an attrs dict."""
+        bw = self.bit_weights if self.bit_weights.shape[0] else None
+        return unpack_attr_words(self.kind, words, self.n_bits, bw)
+
+    def fold_query(self, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(q_eff, q_norm): scale-folded query + its UNfolded sq-norm."""
+        q32 = jnp.asarray(q, jnp.float32)
+        return q32 * self.q_scale[None, :], jnp.sum(q32 * q32, axis=-1)
+
+
+def build_layout(xb, attr: AttrTable, *,
+                 vec_dtype: str = "f32") -> FusedLayout:
+    """Pack (vectors, attributes) into a FusedLayout.
+
+    vec_dtype "f32" reproduces the default path's distances bit-for-bit
+    (same norms, same dot); "int8" stores per-dim symmetric codes (4x less
+    HBM per expansion) with query-side scale folding.
+    """
+    if vec_dtype not in VEC_DTYPES:
+        raise ValueError(f"vec_dtype must be one of {VEC_DTYPES}")
+    xb = jnp.asarray(xb)
+    x32 = xb.astype(jnp.float32)
+    if vec_dtype == "int8":
+        from ..core.quantized import quantize_int8
+        codes, scale = quantize_int8(x32)
+        vec = codes.astype(jnp.float32)
+        norm = jnp.sum((vec * scale[None, :]) ** 2, axis=-1)
+        q_scale = jnp.asarray(scale, jnp.float32)
+    else:
+        vec = x32
+        norm = jnp.sum(x32 * x32, axis=-1)
+        q_scale = jnp.ones((x32.shape[1],), jnp.float32)
+    words = pack_attr_words(attr)
+    bw = attr.data.get("bit_weights")
+    bw = (jnp.asarray(bw, jnp.float32) if bw is not None
+          else jnp.zeros((0,), jnp.float32))
+    packed = jnp.concatenate([vec, norm[:, None], words], axis=1)
+    return FusedLayout(packed, q_scale, bw, attr.kind, attr.n_bits,
+                       int(x32.shape[1]), vec_dtype)
+
+
+def save_layout(path: str, layout: FusedLayout) -> None:
+    """Persist a packed layout (npz; lossless — attr lanes are bit payloads).
+
+    The vec/norm/attr lanes are stored as raw uint32 so no f32 NaN
+    canonicalization can corrupt bitcast attr words on disk.
+    """
+    np.savez_compressed(
+        path,
+        packed_bits=np.asarray(layout.packed).view(np.uint32),
+        q_scale=np.asarray(layout.q_scale),
+        bit_weights=np.asarray(layout.bit_weights),
+        kind=layout.kind, n_bits=layout.n_bits, d=layout.d,
+        vec_dtype=layout.vec_dtype)
+
+
+def load_layout(path: str) -> FusedLayout:
+    z = np.load(path, allow_pickle=False)
+    packed = jnp.asarray(z["packed_bits"].view(np.float32))
+    return FusedLayout(packed, jnp.asarray(z["q_scale"]),
+                       jnp.asarray(z["bit_weights"]),
+                       str(z["kind"]), int(z["n_bits"]), int(z["d"]),
+                       str(z["vec_dtype"]))

@@ -8,8 +8,7 @@ then comes from XLA pipelining the per-microbatch reduce-scatters).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (JAGConfig, JAGIndex, label_filters, range_filters)
+from repro.core import JAGConfig, JAGIndex, range_filters
 from repro.core import baselines as BL
 from repro.core.ground_truth import exact_filtered_knn
 from repro.core.recall import recall_at_k

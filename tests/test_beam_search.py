@@ -1,7 +1,6 @@
 """GreedySearch behaviour tests: exactness on small graphs, termination,
 visited-set semantics, dedup, and comparator ordering."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import filters as F

@@ -4,11 +4,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (JAGConfig, JAGIndex, range_table, range_filters,
-                        subset_table)
-from repro.core.build import BuildConfig, build_graph, medoid
+from repro.core import JAGConfig, JAGIndex, range_table, range_filters
+from repro.core.build import medoid
 from repro.core.prune import joint_robust_prune, select_to_rows
-from repro.core.distances import sq_norms
 
 
 @pytest.fixture(scope="module")
@@ -162,7 +160,6 @@ def test_int8_search_recall_parity(small_index):
 
 def test_scan_dedup_recall_parity(small_index):
     """dedup='scan' (no N-sized bitmap) keeps recall (§Perf iteration)."""
-    import jax
     from repro.core.beam_search import greedy_search
     from repro.core.distances import query_key_fn
     idx, xb, vals = small_index

@@ -2,7 +2,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import filters as F
 from repro.core import distances as D
@@ -66,9 +68,7 @@ class TestSubset:
         a = np.zeros((2, 40), bool)
         a[1, :7] = True
         t = F.subset_table(a, 40)
-        a1 = {k: v[0] for k, v in t.data.items()}
         a1 = {"bits": t.data["bits"][0:1]}
-        a2 = {"bits": t.data["bits"][None, :, :][0][None].repeat(1, 0)}
         da = D.dist_a(F.SUBSET, a1, {"bits": t.data["bits"][None]})
         np.testing.assert_array_equal(np.asarray(da), [[0.0, 7.0]])
 

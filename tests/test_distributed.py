@@ -6,9 +6,7 @@ import subprocess
 import sys
 import os
 
-import numpy as np
 import jax
-import pytest
 
 from jax.sharding import PartitionSpec as P
 
@@ -28,7 +26,7 @@ def test_resolve_spec_divisibility_and_dedup():
 
 def test_production_rules_cover_all_model_specs():
     from types import SimpleNamespace
-    from repro.configs import all_archs, get
+    from repro.configs import get
     from repro.distributed.sharding import make_rules, resolve_spec
 
     # shape-only stand-in for the 512-chip mesh (1 real device here)
@@ -36,7 +34,7 @@ def test_production_rules_cover_all_model_specs():
                            shape={"pod": 2, "data": 16, "model": 16})
     rules = make_rules(mesh)
     # every logical name used by the models must resolve without KeyError
-    from repro.models import transformer as T, gnn as G, recsys as R
+    from repro.models import transformer as T
     key = jax.random.PRNGKey(0)
     for arch in ("qwen3-1.7b", "llama4-scout-17b-a16e"):
         cfg = get(arch).make_reduced()
@@ -55,8 +53,8 @@ import sys; sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import JAGConfig, JAGIndex, range_table
 from repro.core.distributed import make_serve_step, ShardedServeConfig
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import mesh_kwargs, set_mesh
+mesh = jax.make_mesh((4, 2), ("data", "model"), **mesh_kwargs(2))
 rng = np.random.default_rng(0)
 S, Nloc, d = 8, 300, 8
 xb = rng.normal(size=(S, Nloc, d)).astype(np.float32)
@@ -74,7 +72,7 @@ q = rng.normal(size=(B, d)).astype(np.float32)
 lo = rng.uniform(0, 90, B).astype(np.float32)
 step = jax.jit(make_serve_step(mesh, ShardedServeConfig(k=5, ls=24,
     max_iters=48, query_chunk=8), "range", "range"))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ids, prim, sec = step(jnp.asarray(graphs), jnp.asarray(xb),
         jnp.asarray(xbn), {"value": jnp.asarray(vals)},
         jnp.asarray(entries), jnp.asarray(q),

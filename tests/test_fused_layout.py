@@ -1,0 +1,235 @@
+"""Fused serving layout: kernel/oracle parity, fetch contract, and the
+bit-identical guarantee of ``JAGIndex.search(..., layout="fused")`` across
+all four filter kinds, plus packed-layout persistence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters as F
+from repro.core.distances import gathered_d2, sq_norms
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.kernels import ops, ref
+from repro.serve import (FusedEngine, build_layout, load_layout,
+                         make_fetch_fn, save_layout)
+
+
+def _bits(x):
+    return np.asarray(jax.lax.bitcast_convert_type(x, jnp.uint32))
+
+
+def _table(kind, rng, n):
+    if kind == F.LABEL:
+        return F.label_table(rng.integers(0, 7, n))
+    if kind == F.RANGE:
+        return F.range_table(rng.uniform(0, 100, n).astype(np.float32))
+    if kind == F.SUBSET:
+        return F.subset_table(
+            rng.integers(0, 2, (n, 40)).astype(bool), 40)
+    if kind == F.BOOLEAN:
+        return F.boolean_table(
+            rng.integers(0, 2 ** 10, n).astype(np.uint32), 10)
+    raise ValueError(kind)
+
+
+def _filters(kind, rng, b):
+    if kind == F.LABEL:
+        return F.label_filters(rng.integers(0, 7, b))
+    if kind == F.RANGE:
+        lo = rng.uniform(0, 60, b).astype(np.float32)
+        return F.range_filters(lo, lo + 30.0)
+    if kind == F.SUBSET:
+        return F.subset_filters(
+            rng.integers(0, 2, (b, 40)) * (rng.integers(0, 4, (b, 40)) == 0),
+            40)
+    if kind == F.BOOLEAN:
+        sat = rng.integers(0, 2, (b, 2 ** 10)).astype(bool)
+        sat[:, 0] = True  # keep every predicate satisfiable
+        return F.boolean_filters(sat, 10)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# attr-word codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_attr_word_roundtrip_bit_exact(kind):
+    rng = np.random.default_rng(0)
+    tab = _table(kind, rng, 128)
+    words = F.pack_attr_words(tab)
+    assert words.shape == (128, F.attr_word_width(kind, tab.n_bits))
+    back = F.unpack_attr_words(kind, words, tab.n_bits)
+    for k, v in tab.data.items():
+        got = back[k]
+        assert got.dtype == v.dtype
+        if v.dtype == jnp.float32:
+            np.testing.assert_array_equal(_bits(got), _bits(v))
+        else:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+@pytest.mark.parametrize("vec_dtype", ["f32", "int8"])
+def test_fused_expand_kernel_matches_oracle(kind, vec_dtype):
+    rng = np.random.default_rng(1)
+    N, d, B, C = 150, 24, 4, 9
+    xb = rng.normal(size=(N, d)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, N, (B, C)), jnp.int32)
+    lay = build_layout(xb, _table(kind, rng, N), vec_dtype=vec_dtype)
+    q_eff, q_norm = lay.fold_query(q)
+    kd2, kw = ops.fused_expand(lay.packed, ids, q_eff, q_norm,
+                               d=d, interpret=True)
+    rd2, rw = ref.fused_expand_ref(lay.packed, ids, q_eff, q_norm, d=d)
+    np.testing.assert_allclose(np.asarray(kd2), np.asarray(rd2),
+                               rtol=1e-5, atol=1e-4)
+    # attr lanes are opaque bit payloads: the kernel must copy them exactly
+    # (NaN-payload-safe comparison via bitcast)
+    np.testing.assert_array_equal(_bits(kw), _bits(rw))
+
+
+# ---------------------------------------------------------------------------
+# fetch contract: one-gather fetch == default two-gather expansion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fetch_fn_matches_two_gather_path(kind, use_kernel):
+    rng = np.random.default_rng(2)
+    N, d, B, C = 200, 16, 3, 8
+    xb = rng.normal(size=(N, d)).astype(np.float32)
+    tab = _table(kind, rng, N)
+    lay = build_layout(xb, tab)
+    fetch = make_fetch_fn(lay, use_kernel=use_kernel, interpret=True)
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)
+    ids = jnp.asarray(rng.integers(0, N, (B, C)), jnp.int32)
+    d2, attrs = fetch(ids, q, qn)
+    want_d2 = gathered_d2(jnp.asarray(xb), sq_norms(xb), ids, q, qn)
+    want_attrs = tab.gather(ids)
+    if use_kernel:
+        np.testing.assert_allclose(np.asarray(d2), np.asarray(want_d2),
+                                   rtol=1e-5, atol=1e-4)
+    else:  # XLA path computes the same float ops -> bit-identical
+        np.testing.assert_array_equal(np.asarray(d2), np.asarray(want_d2))
+    assert set(attrs) == set(want_attrs)
+    for k in want_attrs:
+        np.testing.assert_array_equal(np.asarray(attrs[k]),
+                                      np.asarray(want_attrs[k]))
+
+
+def test_fused_engine_contract():
+    rng = np.random.default_rng(3)
+    lay = build_layout(rng.normal(size=(64, 8)).astype(np.float32),
+                       _table(F.LABEL, rng, 64))
+    eng = FusedEngine(lay)
+    assert eng.gathers_per_expansion == 1
+    assert eng.row_bytes == (8 + 1 + 1) * 4
+    d2, attrs = eng.fetch_fn(jnp.zeros((2, 4), jnp.int32),
+                             jnp.zeros((2, 8), jnp.float32),
+                             jnp.zeros((2,), jnp.float32))
+    assert d2.shape == (2, 4) and attrs["label"].shape == (2, 4)
+
+
+def test_int8_layout_matches_int8_dist_fn():
+    from repro.core.quantized import make_int8_dist_fn, quantize_int8
+    rng = np.random.default_rng(4)
+    N, d, B, C = 300, 32, 4, 12
+    xb = rng.normal(size=(N, d)).astype(np.float32)
+    lay = build_layout(xb, _table(F.RANGE, rng, N), vec_dtype="int8")
+    fetch = make_fetch_fn(lay)
+    q = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)
+    ids = jnp.asarray(rng.integers(0, N, (B, C)), jnp.int32)
+    d2, _ = fetch(ids, q, qn)
+    xq, scale = quantize_int8(xb)
+    xq_norm = jnp.sum((xq.astype(jnp.float32) * scale) ** 2, -1)
+    want = make_int8_dist_fn(scale)(xq, xq_norm, ids, q, qn)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: layout="fused" is bit-identical to the default search path
+# ---------------------------------------------------------------------------
+
+def _build_index(kind, n=500, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    xb = rng.normal(size=(n, d)).astype(np.float32)
+    cfg = JAGConfig(degree=10, ls_build=20, batch_size=64, cand_pool=40,
+                    calib_samples=64, n_seeds=4)
+    return JAGIndex.build(xb, _table(kind, rng, n), cfg), rng
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_search_fused_bit_identical(kind):
+    idx, rng = _build_index(kind, seed=5)
+    q = rng.normal(size=(8, 12)).astype(np.float32)
+    filt = _filters(kind, rng, 8)
+    r0 = idx.search(q, filt, k=5, ls=16)
+    r1 = idx.search(q, filt, k=5, ls=16, layout="fused")
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_array_equal(np.asarray(r0.primary),
+                                  np.asarray(r1.primary))
+    np.testing.assert_array_equal(np.asarray(r0.secondary),
+                                  np.asarray(r1.secondary))
+    np.testing.assert_array_equal(np.asarray(r0.n_dist),
+                                  np.asarray(r1.n_dist))
+
+
+def test_search_int8_fused_runs_and_reranks():
+    idx, rng = _build_index(F.RANGE, seed=6)
+    q = rng.normal(size=(6, 12)).astype(np.float32)
+    filt = _filters(F.RANGE, rng, 6)
+    r8 = idx.search_int8(q, filt, k=5, ls=16, layout="fused")
+    r0 = idx.search(q, filt, k=5, ls=16)
+    assert r8.ids.shape == (6, 5)
+    # re-rank makes secondaries exact, so shared ids must agree on d2
+    for b in range(6):
+        m0 = {int(i): float(s) for i, s in zip(r0.ids[b], r0.secondary[b])
+              if int(i) >= 0}
+        for i, s in zip(r8.ids[b], r8.secondary[b]):
+            if int(i) in m0:
+                np.testing.assert_allclose(float(s), m0[int(i)],
+                                           rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vec_dtype", ["f32", "int8"])
+def test_layout_save_load_roundtrip(tmp_path, vec_dtype):
+    rng = np.random.default_rng(7)
+    xb = rng.normal(size=(80, 8)).astype(np.float32)
+    lay = build_layout(xb, _table(F.SUBSET, rng, 80), vec_dtype=vec_dtype)
+    p = str(tmp_path / "layout.npz")
+    save_layout(p, lay)
+    back = load_layout(p)
+    np.testing.assert_array_equal(_bits(back.packed), _bits(lay.packed))
+    np.testing.assert_array_equal(np.asarray(back.q_scale),
+                                  np.asarray(lay.q_scale))
+    assert (back.kind, back.n_bits, back.d, back.vec_dtype) == \
+        (lay.kind, lay.n_bits, lay.d, lay.vec_dtype)
+
+
+def test_index_save_load_keeps_fused_layout(tmp_path):
+    idx, rng = _build_index(F.LABEL, seed=8)
+    q = rng.normal(size=(4, 12)).astype(np.float32)
+    filt = _filters(F.LABEL, rng, 4)
+    r1 = idx.search(q, filt, k=5, ls=16, layout="fused")  # builds layout
+    p = str(tmp_path / "index.npz")
+    idx.save(p)
+    idx2 = JAGIndex.load(p)
+    assert "f32" in idx2._fused  # restored, not rebuilt
+    np.testing.assert_array_equal(
+        _bits(idx2._fused["f32"].packed), _bits(idx._fused["f32"].packed))
+    r2 = idx2.search(q, filt, k=5, ls=16, layout="fused")
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.primary),
+                                  np.asarray(r2.primary))

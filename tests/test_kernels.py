@@ -1,12 +1,11 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.l2dist import l2dist as l2_raw
-from repro.kernels.gather_dist import gather_dist as gd_raw, gather_dist_tile
+from repro.kernels.gather_dist import gather_dist_tile
 from repro.kernels.bitset import bitset_dist
 
 

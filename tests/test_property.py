@@ -1,8 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
-import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import filters as F
 from repro.core import distances as D

@@ -8,8 +8,7 @@ import re
 import sys
 
 sys.path.insert(0, "tools")
-from render_tables import (bench_section, dryrun_summary, perf_table,
-                           roofline_table)
+from render_tables import dryrun_summary, roofline_table
 
 
 def inject(text: str, marker: str, content: str) -> str:

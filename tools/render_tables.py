@@ -2,7 +2,6 @@
 bench_output.txt. Usage: python tools/render_tables.py"""
 import json
 import os
-import re
 import sys
 
 HW = dict(peak=197e12, hbm=819e9, link=50e9)
