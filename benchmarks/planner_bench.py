@@ -1,0 +1,125 @@
+"""Selectivity-sweep benchmark for the adaptive query planner.
+
+For each selectivity band (~0.1% -> ~90%) this times every executor route
+(prefilter | graph | postfilter) plus ``search_auto``, records the router's
+decision, recall@10 against exact ground truth, and the mean distance
+computations per query. CI runs it in fast mode, uploads the JSON as the
+routing-decision artifact, and asserts the router does not collapse every
+band onto one path (see .github/workflows/ci.yml).
+
+Usage: PYTHONPATH=src python -m benchmarks.planner_bench [--json PATH]
+Env:   REPRO_BENCH_FAST=1 -> small scale (CI smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+BANDS = (0.001, 0.01, 0.1, 0.5, 0.9)   # target selectivity per band
+ROUTE_NAMES = ("prefilter", "graph", "postfilter")
+
+
+def _timed(fn, repeats=3):
+    res = fn()
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = fn()
+        jax.block_until_ready(res.ids)
+    return res, (time.perf_counter() - t0) / repeats
+
+
+def main(argv=None) -> dict:
+    from repro.core import JAGConfig, JAGIndex, range_filters, range_table
+    from repro.core.ground_truth import exact_filtered_knn
+    from repro.core.recall import recall_at_k
+    from repro.serve.planner import PlannerConfig, explain, plan
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (CI artifact)")
+    ap.add_argument("--n", type=int, default=None, help="database size")
+    ap.add_argument("--b", type=int, default=None, help="query batch size")
+    args = ap.parse_args(argv)
+
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    n = args.n or (3000 if fast else 20000)
+    b = args.b or (32 if fast else 128)
+    d = 16 if fast else 64
+    k, ls = 10, 64
+
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(n, d)).astype(np.float32)
+    vals = rng.uniform(0, 1, n).astype(np.float32)
+    attr = range_table(vals)
+    cfg = JAGConfig(degree=16 if fast else 32, ls_build=32 if fast else 64,
+                    batch_size=256, cand_pool=64 if fast else 192,
+                    calib_samples=128)
+    t0 = time.time()
+    index = JAGIndex.build(xb, attr, cfg)
+    build_s = time.time() - t0
+    q = (xb[rng.integers(0, n, b)]
+         + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
+    ex = index.executor
+    pcfg = PlannerConfig()
+    # serving-layout metadata for the artifact, without packing the layout
+    from repro.core.filters import attr_word_width
+    from repro.serve import FusedEngine
+    row_bytes = (d + 1 + attr_word_width(attr.kind, attr.n_bits)) * 4
+
+    print(f"# n={n} d={d} b={b} build={build_s:.0f}s "
+          f"row_bytes={row_bytes} "
+          f"gathers_per_expansion={FusedEngine.gathers_per_expansion}")
+    print("band_sel,route,path,qps,recall,mean_n_dist")
+    bands_out = []
+    for sel in BANDS:
+        lo = np.zeros(b, np.float32)
+        filt = range_filters(lo, np.full(b, sel, np.float32))
+        gt = exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q),
+                                filt, k=k)
+        p = plan(filt, attr, pcfg, executor=ex)
+        runs = {
+            "prefilter": lambda: ex.prefilter(q, filt, k=k),
+            "graph": lambda: ex.graph(q, filt, k=k, ls=ls,
+                                      max_iters=2 * ls),
+            "postfilter": lambda: ex.postfilter(q, filt, k=k, ls=ls,
+                                                max_iters=2 * ls),
+            "auto": lambda: index.search_auto(q, filt, k=k, ls=ls),
+        }
+        paths = {}
+        for name, fn in runs.items():
+            res, dt = _timed(fn)
+            rec = recall_at_k(np.asarray(res.ids),
+                              np.asarray(res.primary) == 0,
+                              np.asarray(gt.ids)).mean()
+            paths[name] = {"qps": round(b / dt, 1),
+                           "recall": round(float(rec), 4),
+                           "mean_n_dist": round(
+                               float(np.asarray(res.n_dist).mean()), 1)}
+            print(f"{sel},{p.route},{name},{paths[name]['qps']},"
+                  f"{paths[name]['recall']},{paths[name]['mean_n_dist']}",
+                  flush=True)
+        bands_out.append({"target_sel": sel,
+                          "est_sel": round(p.batch_selectivity, 5),
+                          "route": p.route, "explain": explain(p, pcfg),
+                          "paths": paths})
+
+    out = {"n": n, "d": d, "b": b, "k": k, "ls": ls,
+           "build_s": round(build_s, 1),
+           "row_bytes": row_bytes,
+           "routes": [bd["route"] for bd in bands_out],
+           "bands": bands_out}
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """End-to-end serving driver (the paper's workload): build a JAG over a
 mixed-selectivity dataset, serve batched filtered queries of all four
 filter types, report recall/QPS against exact ground truth — plus the
-post-filtering baseline for contrast.
+post-filtering baseline and the selectivity-adaptive planner
+(``search_auto``, which routes each batch to prefilter | graph |
+postfilter) for contrast.
 
   PYTHONPATH=src python examples/filtered_search_e2e.py [--n 8000]
 """
@@ -28,9 +30,18 @@ def serve(name, make_ds, cfg, ls=64):
     gt = exact_filtered_knn(jnp.asarray(ds.xb), ds.attr,
                             jnp.asarray(ds.queries), ds.filt, k=10)
 
+    plans = []
+
+    def run_auto():
+        res, p = index.search_auto(ds.queries, ds.filt, k=10, ls=ls,
+                                   return_plan=True)
+        plans.append(p)          # the route the measured call actually took
+        return res
+
     out = {}
     for algo, run in (
             ("jag", lambda: index.search(ds.queries, ds.filt, k=10, ls=ls)),
+            ("auto", run_auto),
             ("post", lambda: BL.post_filter_search(unf, ds.queries,
                                                    ds.filt, k=10, ls=ls))):
         res = run()
@@ -45,6 +56,8 @@ def serve(name, make_ds, cfg, ls=64):
         out[algo] = (rec, len(ds.queries) / dt)
     print(f"{name:18s} build={build_s:5.0f}s  "
           f"JAG recall={out['jag'][0]:.3f} qps={out['jag'][1]:7.0f}   "
+          f"auto[{plans[-1].route}] recall={out['auto'][0]:.3f} "
+          f"qps={out['auto'][1]:7.0f}   "
           f"post recall={out['post'][0]:.3f} qps={out['post'][1]:7.0f}  "
           f"(mean selectivity {np.mean(ds.selectivity):.3f})")
 

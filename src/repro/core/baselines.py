@@ -19,7 +19,10 @@ Implemented by mechanism, with the paper baseline each one stands in for:
                       label, queries routed to their label's subgraph.
 
 All baselines share the batched GreedySearch / batch-build substrate, so
-QPS and distance-computation comparisons against JAG are apples-to-apples.
+QPS and distance-computation comparisons against JAG are apples-to-apples —
+and they all compile through the index's single ``serve.Executor`` jit
+cache (previously each call re-created a fresh ``@jax.jit`` closure,
+recompiling the traversal on every invocation).
 """
 from __future__ import annotations
 
@@ -66,17 +69,13 @@ def build_binary(xb, attr: AttrTable, cfg: JAGConfig) -> JAGIndex:
 def post_filter_search(index: JAGIndex, queries, filt: FilterBatch,
                        k: int = 10, ls: int = 64,
                        max_iters: int = 0) -> SearchResult:
-    """Unfiltered search with beam ls, keep the k best filter-passing."""
-    res = index.search_unfiltered(queries, k=ls, ls=ls, max_iters=max_iters)
-    ids = res.ids
-    attrs = index.attr.gather(jnp.maximum(ids, 0))
-    ok = matches(filt, attrs) & (ids >= 0)
-    prim = jnp.where(ok, 0.0, INF)
-    sec = jnp.where(ok, res.secondary, INF)
-    idsm = jnp.where(ok, ids, -1)
-    prim, sec, idsm = jax.lax.sort((prim, sec, idsm), num_keys=2)
-    return SearchResult(idsm[:, :k], prim[:, :k], sec[:, :k], res.vlog,
-                        res.n_expanded, res.n_dist)
+    """Unfiltered search with beam ls, keep the k best filter-passing.
+
+    Delegates to the executor's postfilter route — the same compiled
+    program ``JAGIndex.search_auto`` dispatches to at high selectivity.
+    """
+    return index.executor.postfilter(queries, filt, k=k, ls=ls,
+                                     max_iters=max_iters or 2 * ls)
 
 
 # ---------------------------------------------------------------------------
@@ -86,14 +85,17 @@ def post_filter_search(index: JAGIndex, queries, filt: FilterBatch,
 def binary_search(index: JAGIndex, queries, filt: FilterBatch, k: int = 10,
                   ls: int = 64, max_iters: int = 0) -> SearchResult:
     max_iters = max_iters or 2 * ls
+    key = ("binary", "default", "f32", k, ls, max_iters, filt.kind)
 
-    @jax.jit
-    def run(graph, xb, xb_norm, attr, q, filt, entry):
-        return greedy_search(graph, xb, xb_norm, attr, q, entry,
-                             hard_filter_key_fn(filt), ls=ls, k=k,
-                             max_iters=max_iters)
-    res = run(index.graph, index.xb, index.xb_norm, index.attr,
-              jnp.asarray(queries), filt, index.entry)
+    def make():
+        def run(graph, xb, xb_norm, attr, q, filt, entry):
+            return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                 hard_filter_key_fn(filt), ls=ls, k=k,
+                                 max_iters=max_iters)
+        return run
+    res = index.executor.run(key, make, index.graph, index.xb,
+                             index.xb_norm, index.attr,
+                             jnp.asarray(queries), filt, index.entry)
     # re-key primaries to exact dist_F==0 convention for recall accounting
     ok = res.primary == 0.0
     return SearchResult(jnp.where(ok, res.ids, -1),
@@ -112,20 +114,23 @@ def acorn_search(index: JAGIndex, queries, filt: FilterBatch, k: int = 10,
     max_iters = max_iters or 2 * ls
     W = index.graph.shape[1]
     h2 = min(hop2_per_nbr, W)
+    key = ("acorn", "default", "f32", k, ls, max_iters, filt.kind, h2)
 
-    @jax.jit
-    def run(graph, xb, xb_norm, attr, q, filt, entry):
-        def expand(p):
-            one = jnp.take(graph, p, axis=0)                   # [B, W]
-            two = jnp.take(graph, jnp.maximum(one, 0), axis=0)[..., :h2]
-            two = jnp.where((one >= 0)[:, :, None], two, -1)
-            return jnp.concatenate([one, two.reshape(one.shape[0], -1)],
-                                   axis=1)
-        return greedy_search(graph, xb, xb_norm, attr, q, entry,
-                             hard_filter_key_fn(filt), ls=ls, k=k,
-                             max_iters=max_iters, expand_fn=expand)
-    res = run(index.graph, index.xb, index.xb_norm, index.attr,
-              jnp.asarray(queries), filt, index.entry)
+    def make():
+        def run(graph, xb, xb_norm, attr, q, filt, entry):
+            def expand(p):
+                one = jnp.take(graph, p, axis=0)               # [B, W]
+                two = jnp.take(graph, jnp.maximum(one, 0), axis=0)[..., :h2]
+                two = jnp.where((one >= 0)[:, :, None], two, -1)
+                return jnp.concatenate([one, two.reshape(one.shape[0], -1)],
+                                       axis=1)
+            return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                 hard_filter_key_fn(filt), ls=ls, k=k,
+                                 max_iters=max_iters, expand_fn=expand)
+        return run
+    res = index.executor.run(key, make, index.graph, index.xb,
+                             index.xb_norm, index.attr,
+                             jnp.asarray(queries), filt, index.entry)
     ok = res.primary == 0.0
     return SearchResult(jnp.where(ok, res.ids, -1),
                         jnp.where(ok, 0.0, INF), res.secondary,
@@ -213,17 +218,23 @@ def rwalks_search(rw: RWalksIndex, queries, filt: FilterBatch, k: int = 10,
                   ls: int = 64, max_iters: int = 0) -> SearchResult:
     max_iters = max_iters or 2 * ls
     base = rw.base
-    h = jnp.float32(rw.h)
+    # k only shapes the eager post-validation slice below, not the traced
+    # traversal (which keeps the full ls beam) — so it stays out of the key
+    key = ("rwalks", "default", "f32", 0, ls, max_iters, filt.kind,
+           rw.agg.kind)
 
-    @jax.jit
-    def run(graph, xb, xb_norm, attr, agg, q, filt, entry):
-        def key_fn(ids, _attrs, d2):
-            ag = agg.gather(ids)
-            return h * _rwalks_dist_f(filt, agg.kind, ag) + jnp.sqrt(d2), d2
-        return greedy_search(graph, xb, xb_norm, attr, q, entry, key_fn,
-                             ls=ls, k=ls, max_iters=max_iters)
-    res = run(base.graph, base.xb, base.xb_norm, base.attr, rw.agg,
-              jnp.asarray(queries), filt, base.entry)
+    def make():
+        def run(graph, xb, xb_norm, attr, agg, h, q, filt, entry):
+            def key_fn(ids, _attrs, d2):
+                ag = agg.gather(ids)
+                return (h * _rwalks_dist_f(filt, agg.kind, ag)
+                        + jnp.sqrt(d2), d2)
+            return greedy_search(graph, xb, xb_norm, attr, q, entry, key_fn,
+                                 ls=ls, k=ls, max_iters=max_iters)
+        return run
+    res = base.executor.run(key, make, base.graph, base.xb, base.xb_norm,
+                            base.attr, rw.agg, jnp.float32(rw.h),
+                            jnp.asarray(queries), filt, base.entry)
     # post-validate: keep exact matches only, re-ranked by vector distance
     ids = res.ids
     ok = matches(filt, base.attr.gather(jnp.maximum(ids, 0))) & (ids >= 0)

@@ -308,13 +308,19 @@ def matches(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     raise ValueError(k)
 
 
-def matches_all(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
-    """Full validity matrix bool[B, N] (used by pre-filter / ground truth)."""
-    ids = jnp.arange(table.n)
-    attrs = table.gather(ids)  # [N, ...]
+def matches_sampled(filt: FilterBatch, table: AttrTable,
+                    ids: jnp.ndarray) -> jnp.ndarray:
+    """Validity over a fixed sample: bool[B, S] for sample ids int32[S].
+
+    The jit-compatible probe behind the query planner's selectivity
+    estimator (serve/planner.py): the S sampled attribute rows are gathered
+    ONCE and broadcast [1, S, ...] against the filter batch [B] — never a
+    B*S gather.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    attrs = table.gather(ids)  # [S, ...]
     attrs = {k: (v[None] if k != "bit_weights" else v)
              for k, v in attrs.items()}
-    # broadcast [1, N, ...] vs filter [B] -> [B, N]
     k = filt.kind
     if k == LABEL:
         return attrs["label"] == filt.data["label"][:, None]
@@ -328,9 +334,14 @@ def matches_all(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
         return jnp.all((f & ~a) == 0, axis=-1)
     if k == BOOLEAN:
         a = jnp.broadcast_to(attrs["assign"].astype(jnp.int32),
-                             (filt.batch, table.n))
+                             (filt.batch, ids.shape[0]))
         return jnp.take_along_axis(filt.data["sat"], a, axis=-1)
     raise ValueError(k)
+
+
+def matches_all(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
+    """Full validity matrix bool[B, N] (used by pre-filter / ground truth)."""
+    return matches_sampled(filt, table, jnp.arange(table.n))
 
 
 def selectivity(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:

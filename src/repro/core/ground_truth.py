@@ -2,7 +2,12 @@
 
 Brute force over validity-masked distances, blocked over the database so the
 distance matrix stays bounded; the blocked path is also the production
-pre-filter (paper Appendix A: isolate valid subset, scan it exactly).
+pre-filter (paper Appendix A: isolate valid subset, scan it exactly) — the
+query planner (serve/planner.py) routes low-selectivity batches here, and
+the executor (serve/executor.py) adapts the result to the SearchResult
+contract. ``use_kernel=True`` swaps the per-block distance matmul for the
+scalar-prefetch Pallas tile scan (kernels/ops.gather_dist_tile, padded once
+up front) so each database block is DMA'd HBM->VMEM once on TPU.
 """
 from __future__ import annotations
 
@@ -22,9 +27,10 @@ class GroundTruth(NamedTuple):
     n_dist: jnp.ndarray  # int32 [B]: #valid points scanned (paper Table 1 DC)
 
 
-@partial(jax.jit, static_argnames=("k", "block"))
+@partial(jax.jit, static_argnames=("k", "block", "use_kernel"))
 def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
-                       k: int = 10, block: int = 4096) -> GroundTruth:
+                       k: int = 10, block: int = 4096,
+                       use_kernel: bool = False) -> GroundTruth:
     """Exact top-k among filter-satisfying points, blocked scan."""
     N, d = xb.shape
     B = queries.shape[0]
@@ -33,6 +39,12 @@ def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
     q32 = queries.astype(jnp.float32)
     qn = sq_norms(q32)
     nblk = (N + block - 1) // block
+    if use_kernel:
+        # pad ONCE (rows to a block multiple, d to the 8-lane minimum) so
+        # the fori_loop body is a bare tile DMA + reduction; padded rows
+        # score against the zero vector and are masked by `inb` below
+        xb_pad = jnp.pad(xb32, ((0, (-N) % block), (0, (-d) % 8)))
+        q_pad = jnp.pad(q32, ((0, 0), (0, (-d) % 8)))
 
     top_d = jnp.full((B, k), INF)
     top_i = jnp.full((B, k), -1, jnp.int32)
@@ -43,9 +55,14 @@ def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
         ids = bi * block + jnp.arange(block)
         inb = ids < N
         idc = jnp.minimum(ids, N - 1)
-        xbl = jnp.take(xb32, idc, axis=0)                    # [blk, d]
-        d2 = (jnp.take(xn, idc)[None, :] + qn[:, None]
-              - 2.0 * q32 @ xbl.T)                           # [B, blk]
+        if use_kernel:
+            from ..kernels import ops
+            d2 = ops.gather_dist_tile(xb_pad, jnp.full((B,), bi, jnp.int32),
+                                      q_pad, tile=block)  # [B, blk]
+        else:
+            xbl = jnp.take(xb32, idc, axis=0)                # [blk, d]
+            d2 = (jnp.take(xn, idc)[None, :] + qn[:, None]
+                  - 2.0 * q32 @ xbl.T)                       # [B, blk]
         attrs = attr.gather(jnp.broadcast_to(idc, (B, block)))
         ok = matches(filt, attrs) & inb[None, :]
         d2 = jnp.where(ok, jnp.maximum(d2, 0.0), INF)

@@ -3,19 +3,24 @@
 Thresholds/weights are specified as *quantiles* of the empirical dist_A
 distribution (paper D.3: sample |V|=500 points, take quantiles from
 {100%, 10%, 1%, 0.1%, 0%}) and calibrated to absolute values at build time.
+
+Query execution is delegated to the serving pipeline: every ``search*``
+entry point is a thin shim over ``serve.Executor`` (the single
+jit-compilation cache — this module contains no ``jax.jit`` of its own),
+and ``search_auto`` adds the selectivity-adaptive route on top
+(``serve.planner``: prefilter | graph | postfilter per query batch).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .beam_search import SearchResult, greedy_search
+from .beam_search import SearchResult
 from .build import BuildConfig, build_graph
-from .distances import dist_a, query_key_fn, sq_norms, unfiltered_key_fn
+from .distances import dist_a, sq_norms
 from .filters import AttrTable, FilterBatch
 
 
@@ -73,6 +78,27 @@ def calibrate_weight_unit(xb, attr: AttrTable, n_samples: int,
     return float(np.std(dv)) / sa
 
 
+def _encode_cfg(dc) -> np.ndarray:
+    """Dataclass -> uint8 repr buffer (npz-safe, allow_pickle=False)."""
+    return np.frombuffer(repr(dataclasses.asdict(dc)).encode(), np.uint8)
+
+
+def _decode_cfg(buf) -> dict:
+    """Inverse of :func:`_encode_cfg`.
+
+    ``repr(float('inf'))`` is ``'inf'`` which ``ast.literal_eval`` rejects;
+    rewriting the bare token to the overflowing literal ``2e308`` round-trips
+    it. Word-bounded, so names/values merely *containing* 'inf' are safe —
+    but a string value holding 'inf' as a standalone word would still be
+    rewritten: don't introduce one into JAGConfig/BuildConfig.
+    """
+    import ast
+    import re
+    txt = re.sub(r"\binf\b", "2e308", bytes(buf).decode())
+    return {k: tuple(v) if isinstance(v, list) else v
+            for k, v in ast.literal_eval(txt).items()}
+
+
 class JAGIndex:
     """A built Joint Attribute Graph over (vectors, attributes)."""
 
@@ -86,8 +112,9 @@ class JAGIndex:
         self.entry = entry
         self.cfg = cfg
         self.build_cfg = build_cfg
-        self._search_jit = {}
+        self._executor = None                # serve.Executor, built lazily
         self._fused = {}                     # vec_dtype -> serve.FusedLayout
+        self._q8 = None                      # (codes, scale, norms) cache
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -113,7 +140,16 @@ class JAGIndex:
                                         entry=seeds, verbose=verbose)
         return cls(xb, attr, graph, deg, entry, cfg, bcfg)
 
-    # -- fused serving layout (serve/) --------------------------------------
+    # -- serving state (serve/) ---------------------------------------------
+    @property
+    def executor(self):
+        """The index's ``serve.Executor`` — the one jit cache every search
+        entry point (and the baselines) compiles through."""
+        if self._executor is None:
+            from ..serve.executor import Executor
+            self._executor = Executor(self)
+        return self._executor
+
     def fused_layout(self, vec_dtype: str = "f32"):
         """Build (once) and return the packed [vec|norm|attr] serving layout.
 
@@ -128,6 +164,19 @@ class JAGIndex:
                                                   vec_dtype=vec_dtype)
         return self._fused[vec_dtype]
 
+    def quantized(self):
+        """(codes int8 [N,d], scale f32 [d], dequantized norms f32 [N]).
+
+        Computed once and cached; persisted by :meth:`save` so a loaded
+        index never re-quantizes the database.
+        """
+        if self._q8 is None:
+            from .quantized import quantize_int8
+            xq, scale = quantize_int8(self.xb)
+            xq_norm = jnp.sum((xq.astype(jnp.float32) * scale) ** 2, -1)
+            self._q8 = (xq, scale, xq_norm)
+        return self._q8
+
     # -- query (Algorithm 2) ------------------------------------------------
     def search(self, queries, filt: FilterBatch, k: int = 10,
                ls: int = 64, max_iters: int = 0,
@@ -138,37 +187,9 @@ class JAGIndex:
         layout (one gather per expansion via greedy_search's ``fetch_fn``
         hook) and returns identical ids/keys to the default two-gather path.
         """
-        if layout not in ("default", "fused"):
-            raise ValueError(f"layout must be 'default' or 'fused', "
-                             f"got {layout!r}")
-        max_iters = max_iters or 2 * ls
-        key = ("f", k, ls, max_iters, filt.kind, layout)
-        if layout == "fused":
-            lay = self.fused_layout("f32")
-            if key not in self._search_jit:
-                from ..serve import make_fetch_fn
-
-                @jax.jit
-                def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
-                    return greedy_search(
-                        graph, xb, xb_norm, attr, q, entry,
-                        query_key_fn(filt), ls=ls, k=k, max_iters=max_iters,
-                        fetch_fn=make_fetch_fn(lay))
-                self._search_jit[key] = run
-            return self._search_jit[key](self.graph, self.xb, self.xb_norm,
-                                         self.attr, lay,
-                                         jnp.asarray(queries), filt,
-                                         self.entry)
-        if key not in self._search_jit:
-            @jax.jit
-            def run(graph, xb, xb_norm, attr, q, filt, entry):
-                return greedy_search(graph, xb, xb_norm, attr, q, entry,
-                                     query_key_fn(filt), ls=ls, k=k,
-                                     max_iters=max_iters)
-            self._search_jit[key] = run
-        return self._search_jit[key](self.graph, self.xb, self.xb_norm,
-                                     self.attr, jnp.asarray(queries), filt,
-                                     self.entry)
+        return self.executor.graph(queries, filt, k=k, ls=ls,
+                                   max_iters=max_iters or 2 * ls,
+                                   layout=layout, dtype="f32")
 
     def search_int8(self, queries, filt: FilterBatch, k: int = 10,
                     ls: int = 64, max_iters: int = 0,
@@ -180,115 +201,90 @@ class JAGIndex:
         distances so the returned top-k ordering is exact w.r.t. the
         traversed set. ``layout="fused"`` additionally packs
         [int8 vec | norm | attr] so navigation costs ONE gather per
-        expansion instead of two (the quantized.py §2 layout, realized in
-        serve/layout.py).
+        expansion instead of two.
         """
-        from .quantized import make_int8_dist_fn, quantize_int8, rerank_exact
-        if layout not in ("default", "fused"):
-            raise ValueError(f"layout must be 'default' or 'fused', "
-                             f"got {layout!r}")
-        max_iters = max_iters or 2 * ls
-        if layout == "fused":
-            lay = self.fused_layout("int8")
-            key = ("q8-fused", k, ls, max_iters, filt.kind)
-            if key not in self._search_jit:
-                from ..serve import make_fetch_fn
-
-                @jax.jit
-                def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
-                    res = greedy_search(
-                        graph, xb, xb_norm, attr, q, entry,
-                        query_key_fn(filt), ls=ls, k=ls,
-                        max_iters=max_iters, fetch_fn=make_fetch_fn(lay))
-                    i, p, s = rerank_exact(xb, xb_norm, res.ids,
-                                           res.primary, q, k)
-                    return SearchResult(i, p, s, res.vlog, res.n_expanded,
-                                        res.n_dist)
-                self._search_jit[key] = run
-            return self._search_jit[key](self.graph, self.xb, self.xb_norm,
-                                         self.attr, lay,
-                                         jnp.asarray(queries), filt,
-                                         self.entry)
-        if not hasattr(self, "_q8"):
-            xq, scale = quantize_int8(self.xb)
-            xq_norm = jnp.sum((xq.astype(jnp.float32) * scale) ** 2, -1)
-            self._q8 = (xq, scale, xq_norm)
-        xq, scale, xq_norm = self._q8
-        key = ("q8", k, ls, max_iters, filt.kind)
-        if key not in self._search_jit:
-            @jax.jit
-            def run(graph, xq, xq_norm, scale, xb, xb_norm, attr, q, filt,
-                    entry):
-                res = greedy_search(
-                    graph, xq, xq_norm, attr, q, entry,
-                    query_key_fn(filt), ls=ls, k=ls, max_iters=max_iters,
-                    dist_fn=make_int8_dist_fn(scale))
-                i, p, s = rerank_exact(xb, xb_norm, res.ids, res.primary,
-                                       q, k)
-                return SearchResult(i, p, s, res.vlog, res.n_expanded,
-                                    res.n_dist)
-            self._search_jit[key] = run
-        return self._search_jit[key](self.graph, xq, xq_norm, scale,
-                                     self.xb, self.xb_norm, self.attr,
-                                     jnp.asarray(queries), filt,
-                                     self.entry)
+        return self.executor.graph(queries, filt, k=k, ls=ls,
+                                   max_iters=max_iters or 2 * ls,
+                                   layout=layout, dtype="int8")
 
     def search_unfiltered(self, queries, k: int = 10, ls: int = 64,
                           max_iters: int = 0) -> SearchResult:
         """Pure vector-distance search (used by post-filtering)."""
-        max_iters = max_iters or 2 * ls
-        key = ("u", k, ls, max_iters)
-        if key not in self._search_jit:
-            @jax.jit
-            def run(graph, xb, xb_norm, attr, q, entry):
-                return greedy_search(graph, xb, xb_norm, attr, q, entry,
-                                     unfiltered_key_fn(), ls=ls, k=k,
-                                     max_iters=max_iters)
-            self._search_jit[key] = run
-        return self._search_jit[key](self.graph, self.xb, self.xb_norm,
-                                     self.attr, jnp.asarray(queries),
-                                     self.entry)
+        return self.executor.unfiltered(queries, k=k, ls=ls,
+                                        max_iters=max_iters or 2 * ls)
+
+    def search_auto(self, queries, filt: FilterBatch, k: int = 10,
+                    ls: int = 64, max_iters: int = 0,
+                    planner=None, return_plan: bool = False):
+        """Selectivity-adaptive search: plan a route, then execute it.
+
+        A sampled ``matches()`` probe estimates the batch's selectivity and
+        routes it to the executor's prefilter (masked exact scan), graph
+        (JAG traversal), or postfilter (unfiltered + oversample) route — see
+        ``serve/planner.py``. ``planner`` overrides the ``PlannerConfig``
+        thresholds; ``return_plan=True`` returns ``(result, plan)``.
+        """
+        from ..serve.planner import PlannerConfig, plan as _plan
+        p = _plan(filt, self.attr, planner or PlannerConfig(),
+                  executor=self.executor)
+        mi = max_iters or 2 * ls
+        if p.route == "prefilter":
+            res = self.executor.prefilter(queries, filt, k=k)
+        elif p.route == "postfilter":
+            res = self.executor.postfilter(queries, filt, k=k, ls=ls,
+                                           max_iters=mi)
+        else:
+            res = self.executor.graph(queries, filt, k=k, ls=ls,
+                                      max_iters=mi)
+        return (res, p) if return_plan else res
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str) -> None:
-        """Persist the index; built fused layouts ride along losslessly.
+        """Persist the index; built serving state rides along losslessly.
 
-        Packed rows are stored as raw uint32 bit patterns (``packed_bits``)
-        because the attr lanes are uint32 payloads bitcast into f32 — a
-        value-level f32 round-trip could canonicalize NaNs and corrupt them.
+        Packed fused rows are stored as raw uint32 bit patterns
+        (``packed_bits``) because the attr lanes are uint32 payloads bitcast
+        into f32 — a value-level f32 round-trip could canonicalize NaNs and
+        corrupt them. The calibrated ``BuildConfig`` and any computed int8
+        quantization are persisted too, so :meth:`load` restores the exact
+        build parameters and never re-quantizes.
         """
-        fused = {}
+        extra = {}
         for dt, lay in self._fused.items():
-            fused[f"fused_{dt}__packed_bits"] = (
+            extra[f"fused_{dt}__packed_bits"] = (
                 np.asarray(lay.packed).view(np.uint32))
-            fused[f"fused_{dt}__q_scale"] = np.asarray(lay.q_scale)
-            fused[f"fused_{dt}__bit_weights"] = np.asarray(lay.bit_weights)
+            extra[f"fused_{dt}__q_scale"] = np.asarray(lay.q_scale)
+            extra[f"fused_{dt}__bit_weights"] = np.asarray(lay.bit_weights)
+        if self._q8 is not None:
+            xq, scale, xq_norm = self._q8
+            extra["q8__codes"] = np.asarray(xq)
+            extra["q8__scale"] = np.asarray(scale)
+            extra["q8__norms"] = np.asarray(xq_norm)
         np.savez_compressed(
             path,
             xb=np.asarray(self.xb), graph=np.asarray(self.graph),
             degree=np.asarray(self.degree), entry=np.asarray(self.entry),
             attr_kind=self.attr.kind, attr_nbits=self.attr.n_bits,
-            cfg=np.frombuffer(repr(dataclasses.asdict(self.cfg)).encode(),
-                              dtype=np.uint8),
+            cfg=_encode_cfg(self.cfg),
+            build_cfg=_encode_cfg(self.build_cfg),
             **{f"attr__{k}": np.asarray(v)
                for k, v in self.attr.data.items()},
-            **fused)
+            **extra)
 
     @classmethod
     def load(cls, path: str) -> "JAGIndex":
         z = np.load(path, allow_pickle=False)
-        import ast
-        cfg = JAGConfig(**{
-            k: tuple(v) if isinstance(v, list) else v
-            for k, v in ast.literal_eval(
-                bytes(z["cfg"]).decode()).items()})
+        cfg = JAGConfig(**_decode_cfg(z["cfg"]))
+        # archives predating the build_cfg fix fall back to defaults
+        bcfg = (BuildConfig(**_decode_cfg(z["build_cfg"]))
+                if "build_cfg" in z else BuildConfig())
         attr = AttrTable(str(z["attr_kind"]),
                          {k[len("attr__"):]: jnp.asarray(v)
                           for k, v in z.items() if k.startswith("attr__")},
                          n_bits=int(z["attr_nbits"]))
         idx = cls(jnp.asarray(z["xb"]), attr, jnp.asarray(z["graph"]),
                   jnp.asarray(z["degree"]), jnp.asarray(z["entry"]),
-                  cfg, BuildConfig())
+                  cfg, bcfg)
         from ..serve import FusedLayout
         for dt in ("f32", "int8"):
             key = f"fused_{dt}__packed_bits"
@@ -298,6 +294,10 @@ class JAGIndex:
                     jnp.asarray(z[f"fused_{dt}__q_scale"]),
                     jnp.asarray(z[f"fused_{dt}__bit_weights"]),
                     attr.kind, attr.n_bits, int(z["xb"].shape[1]), dt)
+        if "q8__codes" in z:
+            idx._q8 = (jnp.asarray(z["q8__codes"]),
+                       jnp.asarray(z["q8__scale"]),
+                       jnp.asarray(z["q8__norms"]))
         return idx
 
     # -- stats ---------------------------------------------------------------

@@ -1,8 +1,19 @@
-"""Fused serving layout subsystem: pack [vec | norm | attr] rows so one
-gather per beam expansion feeds the comparator (layout.py), and build the
-``fetch_fn`` closures that plug it into greedy_search (engine.py)."""
-from .engine import FusedEngine, make_fetch_fn
-from .layout import FusedLayout, build_layout, load_layout, save_layout
+"""Serving subsystem: the request -> plan -> execute pipeline.
 
-__all__ = ["FusedEngine", "FusedLayout", "build_layout", "load_layout",
-           "make_fetch_fn", "save_layout"]
+layout.py packs [vec | norm | attr] rows so one gather per beam expansion
+feeds the comparator; engine.py builds the ``fetch_fn`` closures that plug
+it into greedy_search; planner.py estimates filter selectivity and routes
+each query batch to a strategy; executor.py owns the single jit cache
+behind every route (prefilter | graph | postfilter) and every public
+``JAGIndex.search*`` entry point.
+"""
+from .engine import FusedEngine, make_fetch_fn
+from .executor import Executor
+from .layout import FusedLayout, build_layout, load_layout, save_layout
+from .planner import (Plan, PlannerConfig, ROUTES, choose_route,
+                      estimate_selectivity, explain, plan, sample_ids)
+
+__all__ = ["Executor", "FusedEngine", "FusedLayout", "Plan",
+           "PlannerConfig", "ROUTES", "build_layout", "choose_route",
+           "estimate_selectivity", "explain", "load_layout",
+           "make_fetch_fn", "plan", "sample_ids", "save_layout"]

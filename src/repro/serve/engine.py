@@ -58,6 +58,8 @@ class FusedEngine:
     ``gathers_per_expansion`` documents the HBM-traffic contract (1 for the
     fused layout vs 2 for the split vectors+attributes path); benchmarks and
     CI assert on it so the fused path can't silently regress to two gathers.
+    ``Executor.engine(vec_dtype, **kw)`` builds and caches one per
+    (dtype, kwargs) over the owning index's packed layout.
     """
 
     gathers_per_expansion = 1

@@ -1,0 +1,225 @@
+"""Unified search executor: the ONE jit-compilation cache behind every path.
+
+Before this module, each public entry point (``JAGIndex.search``,
+``search_int8``, ``search_unfiltered``) carried its own copy-pasted
+``@jax.jit`` cache block, and the baselines in core/baselines.py re-created
+a fresh ``@jax.jit`` closure on every call (recompiling each time). The
+Executor owns a single cache keyed on
+
+    (route, layout, dtype, k, ls, max_iters, filter kind, *route extras)
+
+so every compiled search variant in the process is enumerable
+(``cache_keys()``), shared across entry points, and traced exactly once.
+``JAGIndex.search/search_int8/search_unfiltered`` are thin shims over the
+``graph``/``unfiltered`` routes below and return bit-identical results to
+the pre-refactor per-method caches (same traced computation, same key
+granularity).
+
+Routes (serve/planner.py owns the router that picks between them):
+
+  prefilter  — masked brute-force scan over filter-passing rows
+               (core/ground_truth.py; on TPU the Pallas tile scan via
+               kernels/ops.gather_dist_tile). Exact; distance computations
+               scale with selectivity * N, so it wins at low selectivity.
+  graph      — JAG traversal (core/beam_search.py), default or fused
+               serving layout, f32 or int8 vector lanes.
+  postfilter — unfiltered traversal with an oversampled beam, the filter
+               applied to the survivors (near-1.0 selectivity).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.beam_search import SearchResult, greedy_search
+from ..core.distances import INF, query_key_fn, unfiltered_key_fn
+from ..core.filters import FilterBatch, matches
+from ..core.ground_truth import exact_filtered_knn
+from ..core.quantized import make_int8_dist_fn, rerank_exact
+from .engine import FusedEngine, make_fetch_fn
+
+LAYOUTS = ("default", "fused")
+VEC_DTYPES = ("f32", "int8")
+
+
+class Executor:
+    """Owns the single jit cache + route implementations for one index.
+
+    Instantiated lazily by ``JAGIndex.executor``; holds only references to
+    the index's device arrays (graph, vectors, attr table, layouts), never
+    copies.
+    """
+
+    def __init__(self, index):
+        self.index = index
+        self._cache: dict = {}
+        self._engines: dict = {}
+
+    # -- cache plumbing ----------------------------------------------------
+    def run(self, key: Tuple, make: Callable[[], Callable], *args):
+        """Execute the cached compilation for ``key``, tracing on first use.
+
+        ``make()`` must return the pure function to ``jax.jit``; it is only
+        invoked on a cache miss, so closure-captured statics (k, ls, ...)
+        must be part of ``key``.
+        """
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._cache[key] = jax.jit(make())
+        return fn(*args)
+
+    def cache_keys(self) -> Tuple:
+        return tuple(self._cache)
+
+    def engine(self, vec_dtype: str = "f32", **kw) -> FusedEngine:
+        """FusedEngine over the index's packed layout (metadata + fetch)."""
+        key = (vec_dtype, tuple(sorted(kw.items())))
+        if key not in self._engines:
+            self._engines[key] = FusedEngine(
+                self.index.fused_layout(vec_dtype), **kw)
+        return self._engines[key]
+
+    # -- graph route (JAG traversal; Algorithm 2) --------------------------
+    def graph(self, queries, filt: FilterBatch, *, k: int, ls: int,
+              max_iters: int, layout: str = "default",
+              dtype: str = "f32") -> SearchResult:
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout must be 'default' or 'fused', "
+                             f"got {layout!r}")
+        if dtype not in VEC_DTYPES:
+            raise ValueError(f"dtype must be 'f32' or 'int8', got {dtype!r}")
+        idx = self.index
+        key = ("graph", layout, dtype, k, ls, max_iters, filt.kind)
+        q = jnp.asarray(queries)
+
+        if dtype == "f32" and layout == "default":
+            def make():
+                def run(graph, xb, xb_norm, attr, q, filt, entry):
+                    return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                         query_key_fn(filt), ls=ls, k=k,
+                                         max_iters=max_iters)
+                return run
+            return self.run(key, make, idx.graph, idx.xb, idx.xb_norm,
+                            idx.attr, q, filt, idx.entry)
+
+        if dtype == "f32":  # fused layout, full precision
+            lay = idx.fused_layout("f32")
+
+            def make():
+                def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
+                    return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                         query_key_fn(filt), ls=ls, k=k,
+                                         max_iters=max_iters,
+                                         fetch_fn=make_fetch_fn(lay))
+                return run
+            return self.run(key, make, idx.graph, idx.xb, idx.xb_norm,
+                            idx.attr, lay, q, filt, idx.entry)
+
+        if layout == "fused":  # int8 lanes, one-gather expansion + re-rank
+            lay = idx.fused_layout("int8")
+
+            def make():
+                def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
+                    res = greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                        query_key_fn(filt), ls=ls, k=ls,
+                                        max_iters=max_iters,
+                                        fetch_fn=make_fetch_fn(lay))
+                    i, p, s = rerank_exact(xb, xb_norm, res.ids,
+                                           res.primary, q, k)
+                    return SearchResult(i, p, s, res.vlog, res.n_expanded,
+                                        res.n_dist)
+                return run
+            return self.run(key, make, idx.graph, idx.xb, idx.xb_norm,
+                            idx.attr, lay, q, filt, idx.entry)
+
+        xq, scale, xq_norm = idx.quantized()  # int8, split layout
+
+        def make():
+            def run(graph, xq, xq_norm, scale, xb, xb_norm, attr, q, filt,
+                    entry):
+                res = greedy_search(
+                    graph, xq, xq_norm, attr, q, entry,
+                    query_key_fn(filt), ls=ls, k=ls, max_iters=max_iters,
+                    dist_fn=make_int8_dist_fn(scale))
+                i, p, s = rerank_exact(xb, xb_norm, res.ids, res.primary,
+                                       q, k)
+                return SearchResult(i, p, s, res.vlog, res.n_expanded,
+                                    res.n_dist)
+            return run
+        return self.run(key, make, idx.graph, xq, xq_norm, scale, idx.xb,
+                        idx.xb_norm, idx.attr, q, filt, idx.entry)
+
+    # -- unfiltered traversal (feeds the postfilter route) -----------------
+    def unfiltered(self, queries, *, k: int, ls: int,
+                   max_iters: int) -> SearchResult:
+        idx = self.index
+        key = ("unfiltered", "default", "f32", k, ls, max_iters, None)
+
+        def make():
+            def run(graph, xb, xb_norm, attr, q, entry):
+                return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                     unfiltered_key_fn(), ls=ls, k=k,
+                                     max_iters=max_iters)
+            return run
+        return self.run(key, make, idx.graph, idx.xb, idx.xb_norm, idx.attr,
+                        jnp.asarray(queries), idx.entry)
+
+    # -- prefilter route (masked exact scan) -------------------------------
+    def prefilter(self, queries, filt: FilterBatch, *, k: int,
+                  block: int = 4096, use_kernel: bool | None = None
+                  ) -> SearchResult:
+        """Exact masked scan adapted to the SearchResult contract.
+
+        primary is 0 where a valid neighbor was found (the scan only ever
+        returns filter-passing points), INF on -1 padding; n_dist counts
+        valid points scanned, matching the paper's DC metric.
+        ``use_kernel`` defaults by backend (the Pallas tile scan on TPU,
+        the XLA matmul scan elsewhere), matching the kernels convention.
+        """
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        idx = self.index
+        key = ("prefilter", "default", "f32", k, 0, 0, filt.kind, block,
+               use_kernel)
+
+        def make():
+            def run(xb, attr, q, filt):
+                gt = exact_filtered_knn(xb, attr, q, filt, k=k, block=block,
+                                        use_kernel=use_kernel)
+                B = q.shape[0]
+                prim = jnp.where(gt.ids >= 0, jnp.float32(0.0), INF)
+                return SearchResult(gt.ids, prim, gt.d2,
+                                    jnp.full((B, 1), -1, jnp.int32),
+                                    jnp.zeros((B,), jnp.int32), gt.n_dist)
+            return run
+        return self.run(key, make, idx.xb, idx.attr, jnp.asarray(queries),
+                        filt)
+
+    # -- postfilter route (oversampled unfiltered beam + filter) -----------
+    def postfilter(self, queries, filt: FilterBatch, *, k: int, ls: int,
+                   max_iters: int) -> SearchResult:
+        """Unfiltered traversal keeping the ls-beam, then keep the k best
+        filter-passing survivors (the Post-Filtering baseline, fused into
+        one compiled program)."""
+        idx = self.index
+        key = ("postfilter", "default", "f32", k, ls, max_iters, filt.kind)
+
+        def make():
+            def run(graph, xb, xb_norm, attr, q, filt, entry):
+                res = greedy_search(graph, xb, xb_norm, attr, q, entry,
+                                    unfiltered_key_fn(), ls=ls, k=ls,
+                                    max_iters=max_iters)
+                ids = res.ids
+                ok = matches(filt, attr.gather(jnp.maximum(ids, 0)))
+                ok = ok & (ids >= 0)
+                prim = jnp.where(ok, 0.0, INF)
+                sec = jnp.where(ok, res.secondary, INF)
+                idsm = jnp.where(ok, ids, -1)
+                prim, sec, idsm = jax.lax.sort((prim, sec, idsm), num_keys=2)
+                return SearchResult(idsm[:, :k], prim[:, :k], sec[:, :k],
+                                    res.vlog, res.n_expanded, res.n_dist)
+            return run
+        return self.run(key, make, idx.graph, idx.xb, idx.xb_norm, idx.attr,
+                        jnp.asarray(queries), filt, idx.entry)

@@ -1,0 +1,112 @@
+"""Selectivity-adaptive query planner: request -> plan -> execute.
+
+JAG's headline claim is robust performance across the entire selectivity
+spectrum, but no single execution strategy wins every band (FAVOR,
+arXiv:2605.07770; the CUHK experimental study, arXiv:2508.16263): at very
+low selectivity an exact masked scan touches fewer points than any graph
+walk, and near selectivity 1.0 an unfiltered traversal plus oversampled
+filtering matches the filtered walk at lower comparator cost. This module
+estimates a filter batch's selectivity with a sampled ``matches()`` probe
+(jit-compatible, all four filter kinds) and routes the batch to one of the
+executor's three routes:
+
+    sel <= prefilter_max_sel   -> "prefilter"   (masked exact scan)
+    sel >= postfilter_min_sel  -> "postfilter"  (unfiltered + oversample)
+    otherwise                  -> "graph"       (JAG traversal)
+
+``JAGIndex.search_auto`` is the end-to-end entry point; thresholds live in
+``PlannerConfig`` (static today — cost-model-driven thresholds and
+per-query route batching are ROADMAP open items).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.filters import AttrTable, FilterBatch, matches_sampled
+
+ROUTES = ("prefilter", "graph", "postfilter")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    n_samples: int = 1024          # attr rows probed per selectivity estimate
+    prefilter_max_sel: float = 0.02
+    postfilter_min_sel: float = 0.75
+    seed: int = 0                  # sample draw (deterministic per planner)
+
+
+class Plan(NamedTuple):
+    """A routing decision for one query batch."""
+    route: str                 # one of ROUTES
+    selectivity: np.ndarray    # f32 [B] per-query estimates
+    batch_selectivity: float   # the median driving the route choice
+    n_sampled: int             # probe size actually used (== n for exact)
+
+
+@functools.lru_cache(maxsize=64)
+def sample_ids(n: int, n_samples: int, seed: int = 0) -> jnp.ndarray:
+    """Deterministic sample of attr-table rows; exact (arange) if it fits.
+
+    Memoized: the draw is identical for a fixed (n, n_samples, seed), and
+    ``replace=False`` costs an O(n) host permutation plus a device upload —
+    too much to repeat on the serving hot path of every ``plan()`` call.
+    """
+    if n_samples >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice(n, n_samples, replace=False), jnp.int32)
+
+
+def estimate_selectivity(filt: FilterBatch, table: AttrTable,
+                         ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-query selectivity estimate f32[B] from a sampled matches() probe.
+
+    Pure jnp on registered pytrees, so it traces under ``jax.jit`` for every
+    filter kind; the executor caches one compilation per (kind, |sample|).
+    """
+    ok = matches_sampled(filt, table, ids)
+    return jnp.mean(ok.astype(jnp.float32), axis=-1)
+
+
+def choose_route(sel: float, cfg: PlannerConfig) -> str:
+    """Threshold router over a batch-level selectivity scalar."""
+    if sel <= cfg.prefilter_max_sel:
+        return "prefilter"
+    if sel >= cfg.postfilter_min_sel:
+        return "postfilter"
+    return "graph"
+
+
+def plan(filt: FilterBatch, table: AttrTable,
+         cfg: PlannerConfig = PlannerConfig(),
+         executor=None) -> Plan:
+    """Estimate the batch's selectivity and pick a route.
+
+    When ``executor`` is given, the probe's compilation lives in the
+    executor's single jit cache (keyed like every route); otherwise the
+    estimate runs as a one-off traced call.
+    """
+    ids = sample_ids(table.n, cfg.n_samples, cfg.seed)
+    n_sampled = int(ids.shape[0])
+    if executor is not None:
+        key = ("estimate", "default", "f32", 0, 0, 0, filt.kind, n_sampled)
+        est = executor.run(key, lambda: estimate_selectivity,
+                           filt, table, ids)
+    else:
+        est = estimate_selectivity(filt, table, ids)
+    sel = np.asarray(est, np.float32)
+    batch_sel = float(np.median(sel))
+    return Plan(choose_route(batch_sel, cfg), sel, batch_sel, n_sampled)
+
+
+def explain(p: Plan, cfg: PlannerConfig = PlannerConfig()) -> str:
+    """One-line human-readable routing rationale (benchmarks / logs)."""
+    lo, hi = cfg.prefilter_max_sel, cfg.postfilter_min_sel
+    return (f"route={p.route} sel~{p.batch_selectivity:.4f} "
+            f"(n_sampled={p.n_sampled}, thresholds: prefilter<={lo}, "
+            f"postfilter>={hi})")

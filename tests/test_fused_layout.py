@@ -218,6 +218,37 @@ def test_layout_save_load_roundtrip(tmp_path, vec_dtype):
         (lay.kind, lay.n_bits, lay.d, lay.vec_dtype)
 
 
+def test_save_load_restores_build_config(tmp_path):
+    """load() used to silently reconstruct with BuildConfig() defaults,
+    dropping the calibrated thresholds/weights the graph was built with."""
+    idx, _ = _build_index(F.RANGE, seed=9)
+    p = str(tmp_path / "index.npz")
+    idx.save(p)
+    idx2 = JAGIndex.load(p)
+    assert idx2.build_cfg == idx.build_cfg
+    assert idx2.build_cfg.thresholds  # calibrated values, not defaults
+    assert idx2.cfg == idx.cfg
+
+
+def test_save_load_persists_int8_quantization(tmp_path):
+    """A loaded index must not re-quantize the database on first
+    search_int8: the codes/scale/norms ride along in the archive."""
+    idx, rng = _build_index(F.RANGE, seed=10)
+    q = rng.normal(size=(4, 12)).astype(np.float32)
+    filt = _filters(F.RANGE, rng, 4)
+    r1 = idx.search_int8(q, filt, k=5, ls=16)   # triggers quantization
+    p = str(tmp_path / "index.npz")
+    idx.save(p)
+    idx2 = JAGIndex.load(p)
+    assert idx2._q8 is not None                 # restored, not recomputed
+    for a, b in zip(idx._q8, idx2._q8):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    r2 = idx2.search_int8(q, filt, k=5, ls=16)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.secondary),
+                                  np.asarray(r2.secondary))
+
+
 def test_index_save_load_keeps_fused_layout(tmp_path):
     idx, rng = _build_index(F.LABEL, seed=8)
     q = rng.normal(size=(4, 12)).astype(np.float32)

@@ -1,0 +1,340 @@
+"""Selectivity-adaptive planner + unified executor.
+
+Covers: (1) the sampled selectivity estimator across all four filter kinds,
+(2) the router picking the expected route at the band extremes of a
+~0.1% -> ~90% selectivity sweep, (3) ``search_auto`` recall parity with the
+best forced route per band, and fewer distance computations than
+always-graph at <=1% selectivity, (4) the executor's single-jit-cache
+contract (no recompiles, no ``@jax.jit`` left in core/jag.py), and (5) the
+shims' bit-identity with the pre-refactor per-method jit blocks.
+"""
+import functools
+import inspect
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters as F
+from repro.core import jag as jag_module
+from repro.core.beam_search import greedy_search
+from repro.core.distances import query_key_fn, unfiltered_key_fn
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.core.recall import recall_at_k
+from repro.serve.planner import (PlannerConfig, estimate_selectivity, plan,
+                                 sample_ids)
+
+N, D, B = 1200, 12, 16
+LS = 192          # parity beam: large enough that graph/postfilter saturate
+BANDS = ("low", "mid", "high")          # ~0.1-0.7% / ~12-15% / >=85%
+EXPECTED_ROUTE = {"low": "prefilter", "mid": "graph", "high": "postfilter"}
+
+
+def _dataset(kind, rng):
+    """(attr table, band -> FilterBatch) with controllable selectivity."""
+    if kind == F.RANGE:
+        tab = F.range_table(rng.uniform(0, 1, N).astype(np.float32))
+
+        def mk(band):
+            hi = {"low": 0.004, "mid": 0.15, "high": 0.92}[band]
+            return F.range_filters(np.zeros(B), np.full(B, hi))
+    elif kind == F.LABEL:
+        labels = np.zeros(N, np.int64)
+        labels[:2] = 1                      # sel ~0.0017
+        labels[2:2 + N // 7] = 2            # sel ~0.14
+        rng.shuffle(labels)
+        tab = F.label_table(labels)
+
+        def mk(band):
+            lab = {"low": 1, "mid": 2, "high": 0}[band]
+            return F.label_filters(np.full(B, lab))
+    elif kind == F.SUBSET:
+        tab = F.subset_table(rng.random((N, 24)) < 0.5, 24)
+
+        def mk(band):
+            m = {"low": 9, "mid": 3, "high": 0}[band]   # sel 2^-m
+            fb = np.zeros((B, 24), bool)
+            fb[:, :m] = True
+            return F.subset_filters(fb, 24)
+    else:  # BOOLEAN
+        nv, size = 10, 1 << 10
+        tab = F.boolean_table(rng.integers(0, size, N).astype(np.uint32), nv)
+
+        def mk(band):
+            n_sat = {"low": 2, "mid": 128, "high": 920}[band]
+            sat = np.zeros((B, size), bool)
+            for i in range(B):
+                sat[i, rng.choice(size, n_sat, replace=False)] = True
+            return F.boolean_filters(sat, nv)
+    return tab, mk
+
+
+_SEEDS = {F.LABEL: 11, F.RANGE: 22, F.SUBSET: 33, F.BOOLEAN: 44}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(kind):
+    """Built index + band filters for one kind (cached across tests)."""
+    rng = np.random.default_rng(_SEEDS[kind])
+    xb = rng.normal(size=(N, D)).astype(np.float32)
+    tab, mk = _dataset(kind, rng)
+    cfg = JAGConfig(degree=24, ls_build=48, batch_size=128, cand_pool=96,
+                    calib_samples=128, n_seeds=8)
+    idx = JAGIndex.build(xb, tab, cfg)
+    # queries near the data manifold so graph traversal can saturate recall
+    q = (xb[rng.integers(0, N, B)]
+         + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+    filters = {band: mk(band) for band in BANDS}
+    return xb, tab, idx, q, filters
+
+
+def _recall(res, gt):
+    return recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                       np.asarray(gt.ids)).mean()
+
+
+# ---------------------------------------------------------------------------
+# estimator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_estimator_exact_with_full_sample(kind):
+    _, tab, _, _, filters = _setup(kind)
+    for band in BANDS:
+        filt = filters[band]
+        ids = sample_ids(tab.n, tab.n)          # full probe -> exact
+        est = np.asarray(estimate_selectivity(filt, tab, ids))
+        true = np.asarray(F.selectivity(filt, tab))
+        np.testing.assert_allclose(est, true, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_estimator_sampled_within_tolerance(kind):
+    _, tab, _, _, filters = _setup(kind)
+    ids = sample_ids(tab.n, 512, seed=3)
+    assert ids.shape[0] == 512
+    for band in BANDS:
+        filt = filters[band]
+        est = np.asarray(estimate_selectivity(filt, tab, ids))
+        true = np.asarray(F.selectivity(filt, tab))
+        np.testing.assert_allclose(est, true, atol=0.06)
+
+
+def test_estimator_jit_compatible_all_kinds():
+    for kind in F.KINDS:
+        _, tab, _, _, filters = _setup(kind)
+        ids = sample_ids(tab.n, 256, seed=1)
+        jitted = jax.jit(estimate_selectivity)
+        est = jitted(filters["mid"], tab, ids)
+        assert est.shape == (B,) and est.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# router: expected route at the band extremes, for every filter kind
+# ---------------------------------------------------------------------------
+
+def test_choose_route_thresholds():
+    from repro.serve.planner import choose_route
+    cfg = PlannerConfig(prefilter_max_sel=0.02, postfilter_min_sel=0.75)
+    assert choose_route(0.0, cfg) == "prefilter"
+    assert choose_route(0.02, cfg) == "prefilter"
+    assert choose_route(0.021, cfg) == "graph"
+    assert choose_route(0.5, cfg) == "graph"
+    assert choose_route(0.75, cfg) == "postfilter"
+    assert choose_route(1.0, cfg) == "postfilter"
+
+
+def test_plan_without_executor_matches_with_executor():
+    _, tab, idx, _, filters = _setup(F.RANGE)
+    filt = filters["mid"]
+    p0 = plan(filt, tab)                          # one-off traced estimate
+    p1 = plan(filt, tab, executor=idx.executor)   # executor-cached estimate
+    assert p0.route == p1.route
+    np.testing.assert_allclose(p0.selectivity, p1.selectivity, atol=1e-6)
+    assert any(key[0] == "estimate" for key in idx.executor.cache_keys())
+
+@pytest.mark.parametrize("kind", F.KINDS)
+@pytest.mark.parametrize("band", BANDS)
+def test_router_picks_expected_route(kind, band):
+    _, tab, idx, q, filters = _setup(kind)
+    res, p = idx.search_auto(q, filters[band], k=10, ls=LS,
+                             return_plan=True)
+    assert p.route == EXPECTED_ROUTE[band], (
+        kind, band, p.route, p.batch_selectivity)
+    assert res.ids.shape == (B, 10)
+
+
+# ---------------------------------------------------------------------------
+# search_auto recall parity + distance-computation win at low selectivity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_search_auto_matches_best_forced_route(kind):
+    xb, tab, idx, q, filters = _setup(kind)
+    ex = idx.executor
+    for band in BANDS:
+        filt = filters[band]
+        gt = exact_filtered_knn(jnp.asarray(xb), tab, jnp.asarray(q), filt,
+                                k=10)
+        auto = _recall(idx.search_auto(q, filt, k=10, ls=LS), gt)
+        forced = {
+            "prefilter": _recall(ex.prefilter(q, filt, k=10), gt),
+            "graph": _recall(ex.graph(q, filt, k=10, ls=LS,
+                                      max_iters=2 * LS), gt),
+            "postfilter": _recall(ex.postfilter(q, filt, k=10, ls=LS,
+                                                max_iters=2 * LS), gt),
+        }
+        best = max(forced.values())
+        assert auto >= best - 0.01, (kind, band, auto, forced)
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_auto_fewer_dist_comps_than_graph_at_low_selectivity(kind):
+    _, _, idx, q, filters = _setup(kind)
+    filt = filters["low"]
+    res, p = idx.search_auto(q, filt, k=10, ls=64, return_plan=True)
+    assert p.batch_selectivity <= 0.01
+    always_graph = idx.executor.graph(q, filt, k=10, ls=64, max_iters=128)
+    nd_auto = float(np.asarray(res.n_dist).mean())
+    nd_graph = float(np.asarray(always_graph.n_dist).mean())
+    assert nd_auto < nd_graph, (kind, nd_auto, nd_graph)
+
+
+# ---------------------------------------------------------------------------
+# executor: single cache, no recompiles, no @jax.jit left in core/jag.py
+# ---------------------------------------------------------------------------
+
+def test_core_jag_has_no_jit_blocks():
+    src = inspect.getsource(jag_module)
+    assert "@jax.jit" not in src
+    assert "jax.jit(" not in src
+
+
+def test_executor_cache_stable_across_repeat_calls():
+    _, _, idx, q, filters = _setup(F.RANGE)
+    filt = filters["mid"]
+    idx.search(q, filt, k=5, ls=32)
+    idx.search_unfiltered(q, k=5, ls=32)
+    idx.search_auto(q, filt, k=5, ls=32)
+    n = len(idx.executor.cache_keys())
+    idx.search(q, filt, k=5, ls=32)
+    idx.search_unfiltered(q, k=5, ls=32)
+    idx.search_auto(q, filt, k=5, ls=32)
+    assert len(idx.executor.cache_keys()) == n
+    routes = {key[0] for key in idx.executor.cache_keys()}
+    assert "graph" in routes and "estimate" in routes
+
+
+def test_executor_cache_shared_with_baselines():
+    from repro.core import baselines as BL
+    _, _, idx, q, filters = _setup(F.RANGE)
+    filt = filters["mid"]
+    BL.binary_search(idx, q, filt, k=5, ls=32)
+    BL.acorn_search(idx, q, filt, k=5, ls=32)
+    BL.post_filter_search(idx, q, filt, k=5, ls=32)
+    n = len(idx.executor.cache_keys())
+    BL.binary_search(idx, q, filt, k=5, ls=32)
+    BL.acorn_search(idx, q, filt, k=5, ls=32)
+    BL.post_filter_search(idx, q, filt, k=5, ls=32)
+    assert len(idx.executor.cache_keys()) == n
+
+
+def test_executor_engine_cached_per_dtype_and_kwargs():
+    _, _, idx, q, _ = _setup(F.RANGE)
+    ex = idx.executor
+    e0 = ex.engine("f32")
+    assert e0 is ex.engine("f32")                    # cached
+    e1 = ex.engine("f32", use_kernel=True, interpret=True)
+    assert e1 is not e0                              # kwargs key the cache
+    assert e0.gathers_per_expansion == 1
+    assert e0.row_bytes == (D + 1 + 1) * 4           # [vec | norm | 1 word]
+    qn = np.sum(q[:2] * q[:2], axis=-1)
+    d2, attrs = e0.fetch_fn(np.zeros((2, 4), np.int32), q[:2], qn)
+    assert d2.shape == (2, 4) and attrs["value"].shape == (2, 4)
+
+
+def test_prefilter_kernel_wiring_matches_default():
+    xb, tab, idx, q, filters = _setup(F.RANGE)
+    filt = filters["mid"]
+    ex = idx.executor
+    r0 = ex.prefilter(q, filt, k=10)
+    r1 = ex.prefilter(q, filt, k=10, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_allclose(np.asarray(r0.secondary),
+                               np.asarray(r1.secondary), rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(r0.n_dist),
+                                  np.asarray(r1.n_dist))
+
+
+# ---------------------------------------------------------------------------
+# shims return bit-identical results to the pre-refactor jit blocks
+# ---------------------------------------------------------------------------
+
+def test_search_shim_bit_identical_to_prerefactor_jit():
+    _, _, idx, q, filters = _setup(F.RANGE)
+    filt = filters["mid"]
+    k, ls, max_iters = 10, 32, 64
+
+    @jax.jit
+    def ref_run(graph, xb, xb_norm, attr, q, filt, entry):
+        return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                             query_key_fn(filt), ls=ls, k=k,
+                             max_iters=max_iters)
+    want = ref_run(idx.graph, idx.xb, idx.xb_norm, idx.attr,
+                   jnp.asarray(q), filt, idx.entry)
+    got = idx.search(q, filt, k=k, ls=ls, max_iters=max_iters)
+    for field in ("ids", "primary", "secondary", "vlog", "n_expanded",
+                  "n_dist"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
+
+
+def test_search_unfiltered_shim_bit_identical_to_prerefactor_jit():
+    _, _, idx, q, _ = _setup(F.RANGE)
+    k, ls, max_iters = 10, 32, 64
+
+    @jax.jit
+    def ref_run(graph, xb, xb_norm, attr, q, entry):
+        return greedy_search(graph, xb, xb_norm, attr, q, entry,
+                             unfiltered_key_fn(), ls=ls, k=k,
+                             max_iters=max_iters)
+    want = ref_run(idx.graph, idx.xb, idx.xb_norm, idx.attr,
+                   jnp.asarray(q), idx.entry)
+    got = idx.search_unfiltered(q, k=k, ls=ls, max_iters=max_iters)
+    for field in ("ids", "primary", "secondary", "n_dist"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
+
+
+def test_search_int8_shim_bit_identical_to_prerefactor_jit():
+    from repro.core.beam_search import SearchResult
+    from repro.core.quantized import (make_int8_dist_fn, quantize_int8,
+                                      rerank_exact)
+    _, _, idx, q, filters = _setup(F.RANGE)
+    filt = filters["mid"]
+    k, ls, max_iters = 10, 32, 64
+    xq, scale = quantize_int8(idx.xb)
+    xq_norm = jnp.sum((xq.astype(jnp.float32) * scale) ** 2, -1)
+
+    @jax.jit
+    def ref_run(graph, xq, xq_norm, scale, xb, xb_norm, attr, q, filt,
+                entry):
+        res = greedy_search(graph, xq, xq_norm, attr, q, entry,
+                            query_key_fn(filt), ls=ls, k=ls,
+                            max_iters=max_iters,
+                            dist_fn=make_int8_dist_fn(scale))
+        i, p, s = rerank_exact(xb, xb_norm, res.ids, res.primary, q, k)
+        return SearchResult(i, p, s, res.vlog, res.n_expanded, res.n_dist)
+
+    want = ref_run(idx.graph, xq, xq_norm, scale, idx.xb, idx.xb_norm,
+                   idx.attr, jnp.asarray(q), filt, idx.entry)
+    got = idx.search_int8(q, filt, k=k, ls=ls, max_iters=max_iters)
+    for field in ("ids", "primary", "secondary", "n_dist"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
