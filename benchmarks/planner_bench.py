@@ -3,9 +3,14 @@
 For each selectivity band (~0.1% -> ~90%) this times every executor route
 (prefilter | graph | postfilter) plus ``search_auto``, records the router's
 decision, recall@10 against exact ground truth, and the mean distance
-computations per query. CI runs it in fast mode, uploads the JSON as the
-routing-decision artifact, and asserts the router does not collapse every
-band onto one path (see .github/workflows/ci.yml).
+computations per query. A final MIXED band (half the batch at the lowest
+target selectivity, half at the highest, interleaved) times per-query
+routing (``mode="per_query"``: split by band, each group on its own route)
+against whole-batch routing and each forced single route. CI runs it in
+fast mode, uploads the JSON as the routing-decision artifact, and asserts
+the router does not collapse every band onto one path AND that the
+per-query router splits the mixed batch and wins on mean distance
+computations (see .github/workflows/ci.yml).
 
 Usage: PYTHONPATH=src python -m benchmarks.planner_bench [--json PATH]
 Env:   REPRO_BENCH_FAST=1 -> small scale (CI smoke).
@@ -39,7 +44,8 @@ def main(argv=None) -> dict:
     from repro.core import JAGConfig, JAGIndex, range_filters, range_table
     from repro.core.ground_truth import exact_filtered_knn
     from repro.core.recall import recall_at_k
-    from repro.serve.planner import PlannerConfig, explain, plan
+    from repro.serve.planner import (PlannerConfig, explain, plan,
+                                     plan_per_query)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -110,11 +116,48 @@ def main(argv=None) -> dict:
                           "route": p.route, "explain": explain(p, pcfg),
                           "paths": paths})
 
+    # ---- mixed-selectivity batch: per-query vs whole-batch routing --------
+    lo_sel, hi_sel = BANDS[0], BANDS[-1]
+    his = np.where(np.arange(b) % 2 == 0, lo_sel, hi_sel).astype(np.float32)
+    filt = range_filters(np.zeros(b, np.float32), his)
+    gt = exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q), filt, k=k)
+    pq = plan_per_query(filt, attr, pcfg, executor=ex)
+    runs = {
+        "prefilter": lambda: ex.prefilter(q, filt, k=k),
+        "graph": lambda: ex.graph(q, filt, k=k, ls=ls, max_iters=2 * ls),
+        "postfilter": lambda: ex.postfilter(q, filt, k=k, ls=ls,
+                                            max_iters=2 * ls),
+        "batch": lambda: index.search_auto(q, filt, k=k, ls=ls,
+                                           mode="batch"),
+        "per_query": lambda: index.search_auto(q, filt, k=k, ls=ls,
+                                               mode="per_query"),
+    }
+    paths = {}
+    for name, fn in runs.items():
+        res, dt = _timed(fn)
+        rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                          np.asarray(gt.ids)).mean()
+        paths[name] = {"qps": round(b / dt, 1),
+                       "recall": round(float(rec), 4),
+                       "mean_n_dist": round(
+                           float(np.asarray(res.n_dist).mean()), 1)}
+        print(f"mixed({lo_sel}|{hi_sel}),{pq.route},{name},"
+              f"{paths[name]['qps']},{paths[name]['recall']},"
+              f"{paths[name]['mean_n_dist']}", flush=True)
+    mixed = {"target_sel": [lo_sel, hi_sel],
+             "routes": [g.route for g in pq.groups],
+             "groups": [{"route": g.route, "n": int(g.ids.size),
+                         "median_sel": round(g.selectivity, 5)}
+                        for g in pq.groups],
+             "explain": explain(pq, pcfg),
+             "paths": paths}
+
     out = {"n": n, "d": d, "b": b, "k": k, "ls": ls,
            "build_s": round(build_s, 1),
            "row_bytes": row_bytes,
            "routes": [bd["route"] for bd in bands_out],
-           "bands": bands_out}
+           "bands": bands_out,
+           "mixed": mixed}
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(out, fh, indent=1)

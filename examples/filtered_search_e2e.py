@@ -2,8 +2,8 @@
 mixed-selectivity dataset, serve batched filtered queries of all four
 filter types, report recall/QPS against exact ground truth — plus the
 post-filtering baseline and the selectivity-adaptive planner
-(``search_auto``, which routes each batch to prefilter | graph |
-postfilter) for contrast.
+(``search_auto``, which routes each query to prefilter | graph |
+postfilter — a mixed batch prints as route "mixed") for contrast.
 
   PYTHONPATH=src python examples/filtered_search_e2e.py [--n 8000]
 """

@@ -153,6 +153,22 @@ def sq_norms(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
 
 
+def gathered_dot(rows: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Per-candidate dot products <rows[b, c], q[b]> -> f32[B, C].
+
+    Deliberately an elementwise multiply + last-axis reduce, NOT
+    ``einsum("bcd,bd->bc", ...)``: a batched-dot lowering picks different
+    reduction vectorization per batch size, so row b's low-order float bits
+    would depend on how many other queries share the batch. The per-query
+    dispatcher (serve/dispatch.py) regroups arbitrary sub-batches and
+    promises bit-identical per-query results to solo execution, which makes
+    batch-size invariance part of this helper's contract — every gathered
+    candidate dot in the codebase must go through it.
+    """
+    return jnp.sum(rows.astype(jnp.float32) * q.astype(jnp.float32)[:, None],
+                   axis=-1)
+
+
 def gathered_d2(xb: jnp.ndarray, xb_norm: jnp.ndarray, ids: jnp.ndarray,
                 q: jnp.ndarray, q_norm: jnp.ndarray) -> jnp.ndarray:
     """Squared L2 between q[b] and xb[ids[b, c]] via gather + dot.
@@ -160,7 +176,6 @@ def gathered_d2(xb: jnp.ndarray, xb_norm: jnp.ndarray, ids: jnp.ndarray,
     xb [N, d]; ids int32[B, C] (clipped); q [B, d]; -> f32[B, C].
     """
     rows = jnp.take(xb, ids, axis=0, mode="clip")        # [B, C, d]
-    dots = jnp.einsum("bcd,bd->bc", rows.astype(jnp.float32),
-                      q.astype(jnp.float32))
+    dots = gathered_dot(rows, q)
     d2 = jnp.take(xb_norm, ids, mode="clip") - 2.0 * dots + q_norm[:, None]
     return jnp.maximum(d2, 0.0)

@@ -234,6 +234,20 @@ class FilterBatch:
                            {k: v[i:i + 1] for k, v in self.data.items()},
                            self.n_bits)
 
+    def take(self, ids) -> "FilterBatch":
+        """Group-gather: the sub-batch of filter lanes at positions ``ids``.
+
+        Every lane array is per-query ([B, ...]), so a row gather on each
+        yields a well-formed FilterBatch of ``len(ids)`` queries — the
+        per-query dispatcher (serve/dispatch.py) uses this to hand each
+        route group its own contiguous filter sub-batch.
+        """
+        ids = jnp.asarray(ids, jnp.int32)
+        return FilterBatch(self.kind,
+                           {k: jnp.take(v, ids, axis=0)
+                            for k, v in self.data.items()},
+                           self.n_bits)
+
 
 def label_filters(labels) -> FilterBatch:
     return FilterBatch(LABEL, {"label": jnp.asarray(labels, jnp.int32)})

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .distances import INF, sq_norms
-from .filters import AttrTable, FilterBatch, matches
+from .filters import AttrTable, FilterBatch, matches_sampled
 
 
 class GroundTruth(NamedTuple):
@@ -63,8 +63,10 @@ def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
             xbl = jnp.take(xb32, idc, axis=0)                # [blk, d]
             d2 = (jnp.take(xn, idc)[None, :] + qn[:, None]
                   - 2.0 * q32 @ xbl.T)                       # [B, blk]
-        attrs = attr.gather(jnp.broadcast_to(idc, (B, block)))
-        ok = matches(filt, attrs) & inb[None, :]
+        # gather the block's [block] attr rows ONCE and broadcast against
+        # the filter batch — the old [B, block] id matrix repeated the same
+        # gather B times per block on the prefilter hot path
+        ok = matches_sampled(filt, attr, idc) & inb[None, :]
         d2 = jnp.where(ok, jnp.maximum(d2, 0.0), INF)
         ndist = ndist + jnp.sum(ok, axis=1, dtype=jnp.int32)
         cd = jnp.concatenate([top_d, d2], axis=1)

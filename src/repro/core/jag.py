@@ -7,8 +7,9 @@ distribution (paper D.3: sample |V|=500 points, take quantiles from
 Query execution is delegated to the serving pipeline: every ``search*``
 entry point is a thin shim over ``serve.Executor`` (the single
 jit-compilation cache — this module contains no ``jax.jit`` of its own),
-and ``search_auto`` adds the selectivity-adaptive route on top
-(``serve.planner``: prefilter | graph | postfilter per query batch).
+and ``search_auto`` adds the selectivity-adaptive routing on top
+(``serve.planner``: prefilter | graph | postfilter, banded per query and
+dispatched as route-group sub-batches by ``serve.dispatch``).
 """
 from __future__ import annotations
 
@@ -215,27 +216,44 @@ class JAGIndex:
 
     def search_auto(self, queries, filt: FilterBatch, k: int = 10,
                     ls: int = 64, max_iters: int = 0,
-                    planner=None, return_plan: bool = False):
-        """Selectivity-adaptive search: plan a route, then execute it.
+                    planner=None, return_plan: bool = False,
+                    mode: str = "per_query", layout: str = "default",
+                    dtype: str = "f32"):
+        """Selectivity-adaptive search: plan route(s), then execute.
 
-        A sampled ``matches()`` probe estimates the batch's selectivity and
-        routes it to the executor's prefilter (masked exact scan), graph
-        (JAG traversal), or postfilter (unfiltered + oversample) route — see
-        ``serve/planner.py``. ``planner`` overrides the ``PlannerConfig``
-        thresholds; ``return_plan=True`` returns ``(result, plan)``.
+        A sampled ``matches()`` probe estimates filter selectivity and
+        routes to the executor's prefilter (masked exact scan), graph
+        (JAG traversal), or postfilter (unfiltered + oversample) route —
+        see ``serve/planner.py``.
+
+        ``mode="per_query"`` (default) bands each query individually and
+        dispatches every route group as its own contiguous sub-batch
+        (``serve/dispatch.py``), scattering results back into original
+        query order — a mixed-selectivity batch no longer rides the median
+        query's route. ``mode="batch"`` keeps the whole-batch median
+        routing. ``layout``/``dtype`` select the graph route's serving
+        variant (packed fused rows and/or int8 lanes) in either mode.
+        ``planner`` overrides the ``PlannerConfig`` thresholds;
+        ``return_plan=True`` returns ``(result, plan)`` — a ``PerQueryPlan``
+        reporting the per-group decisions, or a whole-batch ``Plan``.
         """
-        from ..serve.planner import PlannerConfig, plan as _plan
-        p = _plan(filt, self.attr, planner or PlannerConfig(),
-                  executor=self.executor)
+        from ..serve.dispatch import dispatch_per_query, run_route
+        from ..serve.planner import (PlannerConfig, plan as _plan,
+                                     plan_per_query)
+        cfg = planner or PlannerConfig()
         mi = max_iters or 2 * ls
-        if p.route == "prefilter":
-            res = self.executor.prefilter(queries, filt, k=k)
-        elif p.route == "postfilter":
-            res = self.executor.postfilter(queries, filt, k=k, ls=ls,
-                                           max_iters=mi)
+        if mode == "per_query":
+            p = plan_per_query(filt, self.attr, cfg, executor=self.executor)
+            res = dispatch_per_query(self.executor, queries, filt, p, k=k,
+                                     ls=ls, max_iters=mi, layout=layout,
+                                     dtype=dtype)
+        elif mode == "batch":
+            p = _plan(filt, self.attr, cfg, executor=self.executor)
+            res = run_route(self.executor, p.route, queries, filt, k=k,
+                            ls=ls, max_iters=mi, layout=layout, dtype=dtype)
         else:
-            res = self.executor.graph(queries, filt, k=k, ls=ls,
-                                      max_iters=mi)
+            raise ValueError(f"mode must be 'per_query' or 'batch', "
+                             f"got {mode!r}")
         return (res, p) if return_plan else res
 
     # -- persistence ---------------------------------------------------------

@@ -23,6 +23,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from .distances import gathered_dot
+
 
 def quantize_int8(xb: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-dim symmetric int8: returns (q int8 [N, d], scale f32 [d])."""
@@ -41,7 +43,7 @@ def make_int8_dist_fn(scale: jnp.ndarray):
     def dist_fn(xb_q, xb_norm, ids, q32, q_norm):
         rows = jnp.take(xb_q, ids, axis=0, mode="clip").astype(jnp.float32)
         rows = rows * scale                                   # dequant
-        dots = jnp.einsum("bcd,bd->bc", rows, q32)
+        dots = gathered_dot(rows, q32)
         d2 = jnp.take(xb_norm, ids, mode="clip") - 2.0 * dots \
             + q_norm[:, None]
         return jnp.maximum(d2, 0.0)
@@ -59,8 +61,8 @@ def rerank_exact(xb: jnp.ndarray, xb_norm: jnp.ndarray, res_ids, res_prim,
     qn = jnp.sum(q32 * q32, axis=-1)
     ids_c = jnp.maximum(res_ids, 0)
     rows = jnp.take(xb, ids_c, axis=0).astype(jnp.float32)
-    d2 = (jnp.take(xb_norm, ids_c) - 2.0 * jnp.einsum(
-        "bcd,bd->bc", rows, q32) + qn[:, None])
+    d2 = (jnp.take(xb_norm, ids_c) - 2.0 * gathered_dot(rows, q32)
+          + qn[:, None])
     d2 = jnp.where(res_ids >= 0, jnp.maximum(d2, 0.0), jnp.inf)
     prim = jnp.where(res_ids >= 0, res_prim, jnp.inf)
     p, s, i = jax.lax.sort((prim, d2, res_ids), num_keys=2)

@@ -3,17 +3,23 @@
 layout.py packs [vec | norm | attr] rows so one gather per beam expansion
 feeds the comparator; engine.py builds the ``fetch_fn`` closures that plug
 it into greedy_search; planner.py estimates filter selectivity and routes
-each query batch to a strategy; executor.py owns the single jit cache
-behind every route (prefilter | graph | postfilter) and every public
-``JAGIndex.search*`` entry point.
+whole batches (``plan``) or individual queries (``plan_per_query``) to a
+strategy; dispatch.py gathers per-query route groups into contiguous
+sub-batches and scatters the results back into original order; executor.py
+owns the single jit cache behind every route (prefilter | graph |
+postfilter) and every public ``JAGIndex.search*`` entry point.
 """
+from .dispatch import dispatch_per_query, regroup, run_route
 from .engine import FusedEngine, make_fetch_fn
 from .executor import Executor
 from .layout import FusedLayout, build_layout, load_layout, save_layout
-from .planner import (Plan, PlannerConfig, ROUTES, choose_route,
-                      estimate_selectivity, explain, plan, sample_ids)
+from .planner import (GroupPlan, Plan, PerQueryPlan, PlannerConfig, ROUTES,
+                      choose_route, estimate_selectivity, explain, plan,
+                      plan_per_query, sample_ids)
 
-__all__ = ["Executor", "FusedEngine", "FusedLayout", "Plan",
-           "PlannerConfig", "ROUTES", "build_layout", "choose_route",
-           "estimate_selectivity", "explain", "load_layout",
-           "make_fetch_fn", "plan", "sample_ids", "save_layout"]
+__all__ = ["Executor", "FusedEngine", "FusedLayout", "GroupPlan", "Plan",
+           "PerQueryPlan", "PlannerConfig", "ROUTES", "build_layout",
+           "choose_route", "dispatch_per_query", "estimate_selectivity",
+           "explain", "load_layout", "make_fetch_fn", "plan",
+           "plan_per_query", "regroup", "run_route", "sample_ids",
+           "save_layout"]

@@ -1,0 +1,106 @@
+"""Per-query route dispatch: group-gather, execute each route, scatter back.
+
+The whole-batch planner routes every query down the route the *median*
+selectivity picks — a batch mixing 0.1% and 90% filters sends half its
+queries down the wrong path, exactly the regime where single-strategy
+systems collapse (FAVOR, arXiv:2605.07770; the CUHK study,
+arXiv:2508.16263). This module closes that gap:
+
+  1. ``planner.plan_per_query`` bands the [B] selectivity vector into
+     route groups (original-batch positions, ascending within a group);
+  2. :func:`dispatch_per_query` gathers each group's queries AND filter
+     lanes (``FilterBatch.take``) into a contiguous sub-batch and runs it
+     through its executor route;
+  3. :func:`regroup` scatters the per-group ``SearchResult``s back into
+     original query order via one inverse-permutation gather per field.
+
+Regrouping relies on the normalized SearchResult contract: every field is
+leading-dim-[B] and ``vlog`` may be ANY width (the prefilter scan has no
+traversal and emits ``[B, 0]``; graph/postfilter emit ``[B, max_iters]``)
+— groups are padded with ``-1`` holes to the widest vlog before the
+scatter. Per-query results are bit-identical to running each query alone
+through its own route: routes apply per-row ops and batch-invariant
+distance computations (every gathered candidate dot goes through
+``distances.gathered_dot``), so group composition never leaks into a
+query's lane. One caveat: the prefilter scan's block distances are a
+``[B, d] @ [d, block]`` GEMM (a batch-invariant mul+sum there measures
+~70x slower) — row-invariant on CPU (measured) and per-row by
+construction in the TPU tile kernel, but an untested GPU GEMM could in
+principle tile low-order float bits differently per batch size.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.beam_search import SearchResult
+from ..core.filters import FilterBatch
+from .planner import PerQueryPlan
+
+__all__ = ["dispatch_per_query", "regroup", "run_route"]
+
+
+def run_route(executor, route: str, queries, filt: FilterBatch, *, k: int,
+              ls: int, max_iters: int, layout: str = "default",
+              dtype: str = "f32") -> SearchResult:
+    """Execute one executor route by name with the serving options it takes.
+
+    ``layout``/``dtype`` select the graph route's serving variant; the
+    prefilter scan is exact f32 by construction and the postfilter
+    traversal runs the default layout, so both ignore them.
+    """
+    if route == "prefilter":
+        return executor.prefilter(queries, filt, k=k)
+    if route == "graph":
+        return executor.graph(queries, filt, k=k, ls=ls,
+                              max_iters=max_iters, layout=layout,
+                              dtype=dtype)
+    if route == "postfilter":
+        return executor.postfilter(queries, filt, k=k, ls=ls,
+                                   max_iters=max_iters)
+    raise ValueError(f"unknown route {route!r}")
+
+
+def regroup(parts, groups, batch: int) -> SearchResult:
+    """Scatter per-group SearchResults back into original query order.
+
+    ``parts[i]`` holds the results for the queries at original-batch
+    positions ``groups[i].ids``. Fields are concatenated in group order and
+    un-permuted with one gather; vlogs are -1-padded to the widest group
+    first so heterogeneous route shapes concatenate cleanly.
+    """
+    width = max(int(r.vlog.shape[1]) for r in parts)
+    parts = [r._replace(vlog=jnp.pad(r.vlog,
+                                     ((0, 0), (0, width - r.vlog.shape[1])),
+                                     constant_values=-1))
+             if r.vlog.shape[1] != width else r for r in parts]
+    order = np.concatenate([g.ids for g in groups])
+    inv = np.empty(batch, np.int32)
+    inv[order] = np.arange(batch, dtype=np.int32)
+    inv = jnp.asarray(inv)
+    return SearchResult(*(jnp.take(jnp.concatenate([getattr(r, f)
+                                                    for r in parts], axis=0),
+                                   inv, axis=0)
+                          for f in SearchResult._fields))
+
+
+def dispatch_per_query(executor, queries, filt: FilterBatch,
+                       pq: PerQueryPlan, *, k: int, ls: int, max_iters: int,
+                       layout: str = "default",
+                       dtype: str = "f32") -> SearchResult:
+    """Run each route group through its executor route; regroup per query.
+
+    Each group's sub-batch shape keys its own executor compilation, so a
+    workload with recurring group sizes reuses the cache like any other
+    batch shape would.
+    """
+    q = jnp.asarray(queries)
+    if len(pq.groups) == 1:      # no split -> no gather/scatter round-trip
+        return run_route(executor, pq.groups[0].route, q, filt, k=k, ls=ls,
+                         max_iters=max_iters, layout=layout, dtype=dtype)
+    parts = [run_route(executor, g.route,
+                       jnp.take(q, jnp.asarray(g.ids), axis=0),
+                       filt.take(g.ids), k=k, ls=ls, max_iters=max_iters,
+                       layout=layout, dtype=dtype)
+             for g in pq.groups]
+    return regroup(parts, pq.groups, q.shape[0])

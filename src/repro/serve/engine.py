@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..core.distances import gathered_dot
 from ..kernels import ops
 from .layout import FusedLayout
 
@@ -43,7 +44,7 @@ def make_fetch_fn(layout: FusedLayout, *, use_kernel: bool = False,
                                          d=d, interpret=interpret)
         else:
             rows = jnp.take(layout.packed, ids, axis=0, mode="clip")
-            dots = jnp.einsum("bcd,bd->bc", rows[..., :d], q_eff)
+            dots = gathered_dot(rows[..., :d], q_eff)
             d2 = jnp.maximum(rows[..., d] - 2.0 * dots + q_norm[:, None],
                              0.0)
             words = rows[..., d + 1:]

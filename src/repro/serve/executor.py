@@ -56,8 +56,23 @@ class Executor:
         self.index = index
         self._cache: dict = {}
         self._engines: dict = {}
+        self._samples: dict = {}
 
     # -- cache plumbing ----------------------------------------------------
+    def sample_ids(self, n: int, n_samples: int, seed: int = 0):
+        """Planner probe rows, cached per executor (so per index).
+
+        Replaces the former module-level ``functools.lru_cache`` on
+        ``planner.sample_ids``, which pinned device buffers process-wide
+        across index lifetimes and test runs; these die with the executor.
+        """
+        key = (n, n_samples, seed)
+        ids = self._samples.get(key)
+        if ids is None:
+            from .planner import sample_ids
+            ids = self._samples[key] = sample_ids(n, n_samples, seed)
+        return ids
+
     def run(self, key: Tuple, make: Callable[[], Callable], *args):
         """Execute the cached compilation for ``key``, tracing on first use.
 
@@ -174,7 +189,11 @@ class Executor:
 
         primary is 0 where a valid neighbor was found (the scan only ever
         returns filter-passing points), INF on -1 padding; n_dist counts
-        valid points scanned, matching the paper's DC metric.
+        valid points scanned, matching the paper's DC metric. vlog is the
+        honest width-0 ``[B, 0]`` — there is no traversal to log — per the
+        normalized contract (SearchResult.vlog may be any width; the
+        per-query dispatcher pads groups to a common width when it
+        regroups routes).
         ``use_kernel`` defaults by backend (the Pallas tile scan on TPU,
         the XLA matmul scan elsewhere), matching the kernels convention.
         """
@@ -191,7 +210,7 @@ class Executor:
                 B = q.shape[0]
                 prim = jnp.where(gt.ids >= 0, jnp.float32(0.0), INF)
                 return SearchResult(gt.ids, prim, gt.d2,
-                                    jnp.full((B, 1), -1, jnp.int32),
+                                    jnp.zeros((B, 0), jnp.int32),
                                     jnp.zeros((B,), jnp.int32), gt.n_dist)
             return run
         return self.run(key, make, idx.xb, idx.attr, jnp.asarray(queries),
@@ -202,7 +221,14 @@ class Executor:
                    max_iters: int) -> SearchResult:
         """Unfiltered traversal keeping the ls-beam, then keep the k best
         filter-passing survivors (the Post-Filtering baseline, fused into
-        one compiled program)."""
+        one compiled program).
+
+        n_dist counts the traversal's distance computations PLUS the filter
+        evaluations applied to the surviving beam entries — the paper's DC
+        metric compares this route against prefilter/graph, both of which
+        charge every point their comparator touches, so omitting the
+        survivor evaluations undercounted this route.
+        """
         idx = self.index
         key = ("postfilter", "default", "f32", k, ls, max_iters, filt.kind)
 
@@ -218,8 +244,10 @@ class Executor:
                 sec = jnp.where(ok, res.secondary, INF)
                 idsm = jnp.where(ok, ids, -1)
                 prim, sec, idsm = jax.lax.sort((prim, sec, idsm), num_keys=2)
+                n_dist = res.n_dist + jnp.sum(ids >= 0, axis=1,
+                                              dtype=jnp.int32)
                 return SearchResult(idsm[:, :k], prim[:, :k], sec[:, :k],
-                                    res.vlog, res.n_expanded, res.n_dist)
+                                    res.vlog, res.n_expanded, n_dist)
             return run
         return self.run(key, make, idx.graph, idx.xb, idx.xb_norm, idx.attr,
                         jnp.asarray(queries), filt, idx.entry)

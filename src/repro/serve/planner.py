@@ -6,23 +6,33 @@ arXiv:2605.07770; the CUHK experimental study, arXiv:2508.16263): at very
 low selectivity an exact masked scan touches fewer points than any graph
 walk, and near selectivity 1.0 an unfiltered traversal plus oversampled
 filtering matches the filtered walk at lower comparator cost. This module
-estimates a filter batch's selectivity with a sampled ``matches()`` probe
-(jit-compatible, all four filter kinds) and routes the batch to one of the
+estimates filter selectivity with a sampled ``matches()`` probe
+(jit-compatible, all four filter kinds) and routes to one of the
 executor's three routes:
 
     sel <= prefilter_max_sel   -> "prefilter"   (masked exact scan)
     sel >= postfilter_min_sel  -> "postfilter"  (unfiltered + oversample)
     otherwise                  -> "graph"       (JAG traversal)
 
-``JAGIndex.search_auto`` is the end-to-end entry point; thresholds live in
-``PlannerConfig`` (static today — cost-model-driven thresholds and
-per-query route batching are ROADMAP open items).
+Two planning granularities share the probe:
+
+  * :func:`plan` — whole-batch: one route chosen by the *median* estimate
+    (``JAGIndex.search_auto(mode="batch")``).
+  * :func:`plan_per_query` — the per-query router: bands the [B]
+    selectivity vector query-by-query and groups queries by route, so a
+    batch mixing 0.1% and 90% filters no longer drags half its queries
+    down the wrong path. ``serve/dispatch.py`` gathers each group (queries
+    AND filter lanes) into a contiguous sub-batch, runs it through its
+    route, and scatters the results back into original query order.
+
+``JAGIndex.search_auto`` is the end-to-end entry point (default
+``mode="per_query"``); thresholds live in ``PlannerConfig`` (static today —
+cost-model-driven thresholds remain a ROADMAP open item).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -41,20 +51,51 @@ class PlannerConfig:
 
 
 class Plan(NamedTuple):
-    """A routing decision for one query batch."""
+    """A whole-batch routing decision."""
     route: str                 # one of ROUTES
     selectivity: np.ndarray    # f32 [B] per-query estimates
     batch_selectivity: float   # the median driving the route choice
     n_sampled: int             # probe size actually used (== n for exact)
 
 
-@functools.lru_cache(maxsize=64)
+class GroupPlan(NamedTuple):
+    """One route group of a per-query plan."""
+    route: str                 # one of ROUTES
+    ids: np.ndarray            # int32 [G] positions in the original batch
+    selectivity: float         # median estimate within the group
+
+
+class PerQueryPlan(NamedTuple):
+    """Per-query routing decisions for one batch.
+
+    ``routes[b]`` is query b's route; ``groups`` lists the non-empty route
+    groups in ROUTES order, each with the original-batch positions the
+    dispatcher gathers/scatters by. ``route``/``batch_selectivity``
+    properties mirror the whole-batch :class:`Plan` so logging and
+    benchmarks can treat either plan flavor uniformly.
+    """
+    routes: Tuple[str, ...]    # per-query route, len B
+    selectivity: np.ndarray    # f32 [B] per-query estimates
+    groups: Tuple[GroupPlan, ...]
+    n_sampled: int
+
+    @property
+    def route(self) -> str:
+        """The single route when the batch didn't split, else "mixed"."""
+        return self.groups[0].route if len(self.groups) == 1 else "mixed"
+
+    @property
+    def batch_selectivity(self) -> float:
+        return float(np.median(self.selectivity))
+
+
 def sample_ids(n: int, n_samples: int, seed: int = 0) -> jnp.ndarray:
     """Deterministic sample of attr-table rows; exact (arange) if it fits.
 
-    Memoized: the draw is identical for a fixed (n, n_samples, seed), and
-    ``replace=False`` costs an O(n) host permutation plus a device upload —
-    too much to repeat on the serving hot path of every ``plan()`` call.
+    Deliberately NOT memoized at module level: an ``lru_cache`` here would
+    pin JAX device buffers process-wide across index lifetimes and test
+    runs. The serving hot path goes through ``Executor.sample_ids``, which
+    scopes the cached device arrays to one index's executor.
     """
     if n_samples >= n:
         return jnp.arange(n, dtype=jnp.int32)
@@ -74,7 +115,7 @@ def estimate_selectivity(filt: FilterBatch, table: AttrTable,
 
 
 def choose_route(sel: float, cfg: PlannerConfig) -> str:
-    """Threshold router over a batch-level selectivity scalar."""
+    """Threshold router over one selectivity scalar."""
     if sel <= cfg.prefilter_max_sel:
         return "prefilter"
     if sel >= cfg.postfilter_min_sel:
@@ -82,16 +123,13 @@ def choose_route(sel: float, cfg: PlannerConfig) -> str:
     return "graph"
 
 
-def plan(filt: FilterBatch, table: AttrTable,
-         cfg: PlannerConfig = PlannerConfig(),
-         executor=None) -> Plan:
-    """Estimate the batch's selectivity and pick a route.
-
-    When ``executor`` is given, the probe's compilation lives in the
-    executor's single jit cache (keyed like every route); otherwise the
-    estimate runs as a one-off traced call.
-    """
-    ids = sample_ids(table.n, cfg.n_samples, cfg.seed)
+def _estimate(filt: FilterBatch, table: AttrTable, cfg: PlannerConfig,
+              executor) -> Tuple[np.ndarray, int]:
+    """Shared probe: host f32[B] estimates + the probe size used."""
+    if executor is not None:
+        ids = executor.sample_ids(table.n, cfg.n_samples, cfg.seed)
+    else:
+        ids = sample_ids(table.n, cfg.n_samples, cfg.seed)
     n_sampled = int(ids.shape[0])
     if executor is not None:
         key = ("estimate", "default", "f32", 0, 0, 0, filt.kind, n_sampled)
@@ -99,14 +137,50 @@ def plan(filt: FilterBatch, table: AttrTable,
                            filt, table, ids)
     else:
         est = estimate_selectivity(filt, table, ids)
-    sel = np.asarray(est, np.float32)
+    return np.asarray(est, np.float32), n_sampled
+
+
+def plan(filt: FilterBatch, table: AttrTable,
+         cfg: PlannerConfig = PlannerConfig(),
+         executor=None) -> Plan:
+    """Estimate the batch's selectivity and pick ONE route for all queries.
+
+    When ``executor`` is given, the probe's compilation lives in the
+    executor's single jit cache (keyed like every route); otherwise the
+    estimate runs as a one-off traced call.
+    """
+    sel, n_sampled = _estimate(filt, table, cfg, executor)
     batch_sel = float(np.median(sel))
     return Plan(choose_route(batch_sel, cfg), sel, batch_sel, n_sampled)
 
 
-def explain(p: Plan, cfg: PlannerConfig = PlannerConfig()) -> str:
+def plan_per_query(filt: FilterBatch, table: AttrTable,
+                   cfg: PlannerConfig = PlannerConfig(),
+                   executor=None) -> PerQueryPlan:
+    """Band the per-query selectivity vector into route groups.
+
+    Same probe as :func:`plan`; the [B] estimates are banded query-by-query
+    and grouped by route (positions kept in ascending order so the
+    dispatcher's gather/scatter is a stable permutation).
+    """
+    sel, n_sampled = _estimate(filt, table, cfg, executor)
+    routes = tuple(choose_route(float(s), cfg) for s in sel)
+    routes_arr = np.asarray(routes)
+    groups = []
+    for route in ROUTES:
+        members = np.flatnonzero(routes_arr == route)
+        if members.size:
+            groups.append(GroupPlan(route, members.astype(np.int32),
+                                    float(np.median(sel[members]))))
+    return PerQueryPlan(routes, sel, tuple(groups), n_sampled)
+
+
+def explain(p, cfg: PlannerConfig = PlannerConfig()) -> str:
     """One-line human-readable routing rationale (benchmarks / logs)."""
     lo, hi = cfg.prefilter_max_sel, cfg.postfilter_min_sel
-    return (f"route={p.route} sel~{p.batch_selectivity:.4f} "
-            f"(n_sampled={p.n_sampled}, thresholds: prefilter<={lo}, "
-            f"postfilter>={hi})")
+    head = f"route={p.route} sel~{p.batch_selectivity:.4f}"
+    if isinstance(p, PerQueryPlan):
+        split = " ".join(f"{g.route}:{g.ids.size}" for g in p.groups)
+        head += f" [{split}]"
+    return (f"{head} (n_sampled={p.n_sampled}, thresholds: "
+            f"prefilter<={lo}, postfilter>={hi})")

@@ -1,0 +1,293 @@
+"""Per-query route batching: dispatch order-invariance + planner-path fixes.
+
+Covers (1) the order-invariance contract — a shuffled mixed-selectivity
+batch routed with ``mode="per_query"`` returns bit-identical per-query
+(ids, primary, secondary) to each query run ALONE through its own route;
+(2) ``FilterBatch.take`` group-gather semantics; (3) regression tests for
+the planner-path bugs this PR fixes: ``search_auto`` dropping serving
+options (layout/dtype never reached the executor cache key), the
+postfilter route's n_dist omitting the survivor filter evaluations, the
+module-level lru_cache pinning sample-id device buffers process-wide, and
+the prefilter scan's B× redundant attr gather.
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters as F
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.serve.dispatch import dispatch_per_query, run_route
+from repro.serve.planner import (PerQueryPlan, PlannerConfig, plan,
+                                 plan_per_query, sample_ids)
+
+N, D, B = 1200, 12, 18
+LS, MAX_ITERS = 48, 96
+# per-band range-filter caps: ~0.4% / ~15% / ~92% selectivity — far enough
+# from the 0.02/0.75 thresholds that the sampled probe can't misband
+BAND_HI = {"prefilter": 0.004, "graph": 0.15, "postfilter": 0.92}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup():
+    rng = np.random.default_rng(7)
+    xb = rng.normal(size=(N, D)).astype(np.float32)
+    tab = F.range_table(rng.uniform(0, 1, N).astype(np.float32))
+    cfg = JAGConfig(degree=24, ls_build=48, batch_size=128, cand_pool=96,
+                    calib_samples=128, n_seeds=8)
+    idx = JAGIndex.build(xb, tab, cfg)
+    q = (xb[rng.integers(0, N, B)]
+         + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+    return xb, tab, idx, q
+
+
+def _mixed_filters(rng):
+    """A shuffled batch cycling through all three bands."""
+    his = np.array([BAND_HI[r] for r in
+                    ("prefilter", "graph", "postfilter")] * B)[:B]
+    his = his[rng.permutation(B)].astype(np.float32)
+    return F.range_filters(np.zeros(B, np.float32), his), his
+
+
+# ---------------------------------------------------------------------------
+# FilterBatch.take: group-gather of filter lanes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_filter_batch_take_matches_lanes(kind):
+    rng = np.random.default_rng(3)
+    if kind == F.LABEL:
+        filt = F.label_filters(rng.integers(0, 5, B))
+    elif kind == F.RANGE:
+        lo = rng.uniform(0, 0.4, B).astype(np.float32)
+        filt = F.range_filters(lo, lo + 0.3)
+    elif kind == F.SUBSET:
+        filt = F.subset_filters(rng.random((B, 24)) < 0.2, 24)
+    else:
+        sat = rng.random((B, 1 << 6)) < 0.3
+        filt = F.boolean_filters(sat, 6)
+    ids = np.array([5, 0, 11, 5, 2], np.int32)   # unordered, with a repeat
+    sub = filt.take(ids)
+    assert sub.kind == filt.kind and sub.n_bits == filt.n_bits
+    assert sub.batch == len(ids)
+    for j, i in enumerate(ids):
+        lane = filt.lane(int(i))
+        for key in filt.data:
+            np.testing.assert_array_equal(np.asarray(sub.data[key][j]),
+                                          np.asarray(lane.data[key][0]),
+                                          err_msg=(kind, key, int(i)))
+
+
+# ---------------------------------------------------------------------------
+# order invariance: per-query dispatch == each query alone on its own route
+# ---------------------------------------------------------------------------
+
+def test_per_query_dispatch_bit_identical_to_solo_runs():
+    _, _, idx, q = _setup()
+    filt, _ = _mixed_filters(np.random.default_rng(11))
+    res, p = idx.search_auto(q, filt, k=10, ls=LS, max_iters=MAX_ITERS,
+                             return_plan=True)
+    assert isinstance(p, PerQueryPlan)
+    assert len(p.groups) == 3, [g.route for g in p.groups]   # batch split
+    assert p.route == "mixed"
+    ex = idx.executor
+    for i in range(B):
+        solo = run_route(ex, p.routes[i], q[i:i + 1], filt.lane(i), k=10,
+                         ls=LS, max_iters=MAX_ITERS)
+        for field in ("ids", "primary", "secondary"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res, field))[i],
+                np.asarray(getattr(solo, field))[0],
+                err_msg=f"q{i} route={p.routes[i]} field={field}")
+
+
+def test_per_query_dispatch_invariant_to_batch_shuffle():
+    _, _, idx, q = _setup()
+    rng = np.random.default_rng(13)
+    filt, his = _mixed_filters(rng)
+    res = idx.search_auto(q, filt, k=10, ls=LS, max_iters=MAX_ITERS)
+    perm = rng.permutation(B)
+    filt_s = F.range_filters(np.zeros(B, np.float32), his[perm])
+    res_s = idx.search_auto(q[perm], filt_s, k=10, ls=LS,
+                            max_iters=MAX_ITERS)
+    for field in ("ids", "primary", "secondary", "n_dist"):
+        np.testing.assert_array_equal(np.asarray(getattr(res_s, field)),
+                                      np.asarray(getattr(res, field))[perm],
+                                      err_msg=field)
+
+
+def test_per_query_uniform_batch_single_group_matches_forced_route():
+    _, _, idx, q = _setup()
+    for route, hi in BAND_HI.items():
+        filt = F.range_filters(np.zeros(B, np.float32),
+                               np.full(B, hi, np.float32))
+        res, p = idx.search_auto(q, filt, k=10, ls=LS, max_iters=MAX_ITERS,
+                                 return_plan=True)
+        assert len(p.groups) == 1 and p.route == route
+        forced = run_route(idx.executor, route, q, filt, k=10, ls=LS,
+                           max_iters=MAX_ITERS)
+        for field in ("ids", "primary", "secondary", "n_dist"):
+            np.testing.assert_array_equal(np.asarray(getattr(res, field)),
+                                          np.asarray(getattr(forced, field)),
+                                          err_msg=(route, field))
+
+
+def test_regroup_pads_heterogeneous_vlogs_and_restores_order():
+    _, _, idx, q = _setup()
+    filt, _ = _mixed_filters(np.random.default_rng(17))
+    p = plan_per_query(filt, idx.attr, PlannerConfig(),
+                       executor=idx.executor)
+    res = dispatch_per_query(idx.executor, q, filt, p, k=10, ls=LS,
+                             max_iters=MAX_ITERS)
+    # widest route wins; prefilter rows are all -1 holes
+    assert res.vlog.shape == (B, MAX_ITERS)
+    vlog = np.asarray(res.vlog)
+    nexp = np.asarray(res.n_expanded)
+    for i in range(B):
+        if p.routes[i] == "prefilter":
+            assert (vlog[i] == -1).all() and nexp[i] == 0
+        else:
+            assert (vlog[i] >= 0).any()
+
+
+def test_prefilter_route_emits_width_zero_vlog():
+    _, _, idx, q = _setup()
+    filt = F.range_filters(np.zeros(B, np.float32),
+                           np.full(B, BAND_HI["prefilter"], np.float32))
+    res = idx.executor.prefilter(q, filt, k=10)
+    assert res.vlog.shape == (B, 0)
+    assert res.vlog.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# bugfix: search_auto serving options reach the executor cache key
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["per_query", "batch"])
+def test_search_auto_threads_layout_dtype_to_graph_route(mode):
+    _, _, idx, q = _setup()
+    filt = F.range_filters(np.zeros(B, np.float32),
+                           np.full(B, BAND_HI["graph"], np.float32))
+    res = idx.search_auto(q, filt, k=10, ls=LS, max_iters=MAX_ITERS,
+                          mode=mode, layout="fused", dtype="f32")
+    key = ("graph", "fused", "f32", 10, LS, MAX_ITERS, filt.kind)
+    assert key in idx.executor.cache_keys(), idx.executor.cache_keys()
+    want = idx.executor.graph(q, filt, k=10, ls=LS, max_iters=MAX_ITERS,
+                              layout="fused", dtype="f32")
+    for field in ("ids", "primary", "secondary"):
+        np.testing.assert_array_equal(np.asarray(getattr(res, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
+
+
+def test_search_auto_rejects_unknown_mode():
+    _, _, idx, q = _setup()
+    filt = F.range_filters(np.zeros(B, np.float32),
+                           np.full(B, 0.15, np.float32))
+    with pytest.raises(ValueError, match="mode"):
+        idx.search_auto(q, filt, k=10, ls=LS, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# bugfix: postfilter n_dist counts the survivor filter evaluations
+# ---------------------------------------------------------------------------
+
+def test_postfilter_n_dist_counts_survivor_filter_evals():
+    _, _, idx, q = _setup()
+    filt = F.range_filters(np.zeros(B, np.float32),
+                           np.full(B, BAND_HI["postfilter"], np.float32))
+    post = idx.executor.postfilter(q, filt, k=10, ls=LS,
+                                   max_iters=MAX_ITERS)
+    # same unfiltered traversal, full beam returned (k=ls)
+    unf = idx.executor.unfiltered(q, k=LS, ls=LS, max_iters=MAX_ITERS)
+    survivors = np.sum(np.asarray(unf.ids) >= 0, axis=1)
+    assert (survivors > 0).all()
+    np.testing.assert_array_equal(np.asarray(post.n_dist),
+                                  np.asarray(unf.n_dist) + survivors)
+    # the DC metric must charge at least the beam entries it filter-checked
+    assert (np.asarray(post.n_dist) >= survivors).all()
+
+
+# ---------------------------------------------------------------------------
+# bugfix: sample-id cache is executor-scoped, not a process-global lru
+# ---------------------------------------------------------------------------
+
+def test_sample_ids_has_no_module_level_cache():
+    assert not hasattr(sample_ids, "cache_info")     # not an lru_cache
+    assert not hasattr(sample_ids, "cache_clear")
+
+
+def test_executor_scopes_sample_id_buffers():
+    _, tab, idx, _ = _setup()
+    ex = idx.executor
+    a = ex.sample_ids(tab.n, 256, seed=1)
+    assert a is ex.sample_ids(tab.n, 256, seed=1)    # cached per executor
+    assert a is not ex.sample_ids(tab.n, 256, seed=2)
+    # a second index's executor holds its own buffers
+    rng = np.random.default_rng(23)
+    xb2 = rng.normal(size=(200, D)).astype(np.float32)
+    idx2 = JAGIndex.build(xb2, F.range_table(
+        rng.uniform(0, 1, 200).astype(np.float32)),
+        JAGConfig(degree=8, ls_build=16, batch_size=64, cand_pool=32,
+                  calib_samples=64))
+    b = idx2.executor.sample_ids(tab.n, 256, seed=1)
+    assert b is not a
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_and_plan_per_query_share_the_probe():
+    _, tab, idx, _ = _setup()
+    filt, _ = _mixed_filters(np.random.default_rng(29))
+    p0 = plan(filt, tab, executor=idx.executor)
+    p1 = plan_per_query(filt, tab, executor=idx.executor)
+    np.testing.assert_allclose(p0.selectivity, p1.selectivity, atol=1e-7)
+    assert p0.n_sampled == p1.n_sampled
+    assert tuple(sorted({g.route for g in p1.groups})) == (
+        "graph", "postfilter", "prefilter")
+
+
+# ---------------------------------------------------------------------------
+# bugfix: prefilter scan gathers each attr block once, not B times
+# ---------------------------------------------------------------------------
+
+def test_exact_filtered_knn_attr_gather_not_batch_redundant():
+    """The lowered scan must gather [block, W] attr rows, never [B, block, W].
+
+    Regression for the broadcast [B, block] id matrix that re-gathered the
+    same block's attribute rows once per query on the prefilter hot path.
+    """
+    rng = np.random.default_rng(31)
+    n, block, b, w, L = 1024, 256, 8, 2, 64
+    xb = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    tab = F.subset_table(rng.random((n, L)) < 0.5, L)
+    filt = F.subset_filters(np.zeros((b, L), bool), L)
+    q = jnp.asarray(rng.normal(size=(b, D)).astype(np.float32))
+    lowered = jax.jit(exact_filtered_knn,
+                      static_argnames=("k", "block", "use_kernel")).lower(
+        xb, tab, q, filt, k=5, block=block).as_text()
+    assert w == tab.data["bits"].shape[1]
+    gather_lines = [ln for ln in lowered.splitlines()
+                    if "stablehlo.gather" in ln or "stablehlo.dynamic_gather"
+                    in ln]
+    assert any(f"tensor<{block}x{w}xui32>" in ln for ln in gather_lines), \
+        gather_lines                                     # one block gather
+    assert not any(f"tensor<{b}x{block}x{w}xui32>" in ln
+                   for ln in gather_lines), gather_lines  # no B× attr gather
+
+
+def test_exact_filtered_knn_unchanged_by_gather_fix():
+    xb, tab, idx, q = _setup()
+    filt, _ = _mixed_filters(np.random.default_rng(37))
+    gt = exact_filtered_knn(jnp.asarray(xb), tab, jnp.asarray(q), filt,
+                            k=10, block=256)
+    # brute-force reference over the full validity matrix
+    ok = np.asarray(F.matches_all(filt, tab))
+    d2 = (((np.asarray(q)[:, None, :] - xb[None]) ** 2).sum(-1))
+    d2 = np.where(ok, d2, np.inf)
+    order = np.argsort(d2, axis=1, kind="stable")[:, :10]
+    want = np.where(np.take_along_axis(d2, order, 1) < np.inf, order, -1)
+    np.testing.assert_array_equal(np.asarray(gt.ids), want)
+    np.testing.assert_array_equal(np.asarray(gt.n_dist), ok.sum(1))
