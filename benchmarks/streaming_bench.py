@@ -1,0 +1,147 @@
+"""Streaming-insert benchmark: live recall vs rebuild, insert throughput.
+
+Builds a base index, then inserts 4 batches of fresh rows. After each
+insert epoch it measures (1) insert throughput (rows/s into the delta
+segment, compaction time charged separately), (2) ``search_auto`` QPS over
+the live base+delta index, and (3) recall@10 against exact ground truth
+over the concatenated database — side by side with a FULL REBUILD of the
+index over the same rows, the thing streaming replaces. The final batch
+pushes the delta past ``compact_frac``, so the trajectory also covers an
+auto-compaction epoch.
+
+CI runs this in fast mode, uploads ``BENCH_streaming.json`` as the
+streaming trajectory artifact, and asserts the live index's recall stays
+within 0.01 of the rebuild's at every epoch (see .github/workflows/ci.yml).
+
+Usage: PYTHONPATH=src python -m benchmarks.streaming_bench [--json PATH]
+Env:   REPRO_BENCH_FAST=1 -> small scale (CI smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _timed(fn, repeats=3):
+    res = fn()
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = fn()
+        jax.block_until_ready(res.ids)
+    return res, (time.perf_counter() - t0) / repeats
+
+
+def _recall(res, gt):
+    from repro.core.recall import recall_at_k
+    return float(recall_at_k(np.asarray(res.ids),
+                             np.asarray(res.primary) == 0,
+                             np.asarray(gt.ids)).mean())
+
+
+def main(argv=None) -> dict:
+    from repro.core import JAGConfig, JAGIndex, range_filters, range_table
+    from repro.core.ground_truth import exact_filtered_knn
+    from repro.stream import StreamingJAGIndex
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (CI artifact)")
+    ap.add_argument("--n", type=int, default=None, help="base database size")
+    ap.add_argument("--b", type=int, default=None, help="query batch size")
+    args = ap.parse_args(argv)
+
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    n0 = args.n or (1200 if fast else 20000)
+    b = args.b or (32 if fast else 128)
+    d = 16 if fast else 64
+    k, ls = 10, 160
+    n_batches, batch_rows = 4, n0 // 8          # 4 x 12.5% of the base
+    compact_frac = 0.45                         # 4th batch triggers compact
+    sel = 0.3                                   # graph-route band
+
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(n0, d)).astype(np.float32)
+    vals = rng.uniform(0, 1, n0).astype(np.float32)
+    cfg = JAGConfig(degree=16 if fast else 32, ls_build=32 if fast else 64,
+                    batch_size=256, cand_pool=64 if fast else 192,
+                    calib_samples=128)
+    t0 = time.time()
+    stream = StreamingJAGIndex.build(xb, range_table(vals), cfg,
+                                     compact_frac=compact_frac)
+    build_s = time.time() - t0
+    q = (xb[rng.integers(0, n0, b)]
+         + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
+    filt = range_filters(np.zeros(b, np.float32),
+                         np.full(b, sel, np.float32))
+
+    print(f"# n0={n0} d={d} b={b} base_build={build_s:.0f}s "
+          f"batches={n_batches}x{batch_rows} compact_frac={compact_frac}")
+    print("epoch,n_total,delta_rows,compacted,insert_rows_per_s,"
+          "compact_s,qps_stream,recall_stream,rebuild_s,recall_rebuild")
+    all_x, all_v = [xb], [vals]
+    epochs = []
+    for step in range(n_batches):
+        xv = rng.normal(size=(batch_rows, d)).astype(np.float32)
+        vv = rng.uniform(0, 1, batch_rows).astype(np.float32)
+        all_x.append(xv)
+        all_v.append(vv)
+        t0 = time.perf_counter()
+        rep = stream.insert(xv, range_table(vv), auto_compact=False)
+        insert_s = time.perf_counter() - t0
+        compact_s = 0.0
+        if stream.delta.n > compact_frac * stream.base.xb.shape[0]:
+            t0 = time.perf_counter()
+            stream.compact()
+            compact_s = time.perf_counter() - t0
+            rep["compacted"] = True
+
+        cx = np.concatenate(all_x)
+        cv = np.concatenate(all_v)
+        gt = exact_filtered_knn(jnp.asarray(cx), range_table(cv),
+                                jnp.asarray(q), filt, k=k)
+        res, dt = _timed(lambda: stream.search_auto(q, filt, k=k, ls=ls))
+        rec_stream = _recall(res, gt)
+
+        t0 = time.time()
+        rebuilt = JAGIndex.build(cx, range_table(cv), cfg)
+        rebuild_s = time.time() - t0
+        rb, _ = _timed(lambda: rebuilt.search_auto(q, filt, k=k, ls=ls),
+                       repeats=1)
+        rec_rebuild = _recall(rb, gt)
+
+        row = dict(epoch=stream.epoch, n_total=stream.n,
+                   delta_rows=stream.delta.n,
+                   compacted=bool(rep["compacted"]),
+                   insert_rows_per_s=round(batch_rows / insert_s, 1),
+                   compact_s=round(compact_s, 3),
+                   qps_stream=round(b / dt, 1),
+                   recall_stream=round(rec_stream, 4),
+                   rebuild_s=round(rebuild_s, 2),
+                   recall_rebuild=round(rec_rebuild, 4))
+        epochs.append(row)
+        print(",".join(str(row[c]) for c in
+                       ("epoch", "n_total", "delta_rows", "compacted",
+                        "insert_rows_per_s", "compact_s", "qps_stream",
+                        "recall_stream", "rebuild_s", "recall_rebuild")),
+              flush=True)
+
+    out = {"n0": n0, "d": d, "b": b, "k": k, "ls": ls, "sel": sel,
+           "base_build_s": round(build_s, 1),
+           "batch_rows": batch_rows, "compact_frac": compact_frac,
+           "n_compactions": stream.n_compactions,
+           "epochs": epochs}
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main()

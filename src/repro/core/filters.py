@@ -178,6 +178,26 @@ class AttrTable:
                 out[k] = jnp.take(v, ids, axis=0, mode="clip")
         return out
 
+    def append(self, other: "AttrTable") -> "AttrTable":
+        """Rows of ``other`` appended after this table's rows.
+
+        The streaming layer (repro.stream) uses this to materialize the
+        live base+delta attribute table the planner probes. Global
+        ``bit_weights`` (not per-point) are kept from ``self``; ``other``
+        must agree on kind/n_bits.
+        """
+        if other.kind != self.kind or other.n_bits != self.n_bits:
+            raise ValueError(
+                f"cannot append {other.kind}/{other.n_bits} rows to a "
+                f"{self.kind}/{self.n_bits} table")
+        out = {}
+        for k, v in self.data.items():
+            if k == "bit_weights":
+                out[k] = v
+            else:
+                out[k] = jnp.concatenate([v, other.data[k]], axis=0)
+        return AttrTable(self.kind, out, self.n_bits)
+
 
 def label_table(labels) -> AttrTable:
     return AttrTable(LABEL, {"label": jnp.asarray(labels, jnp.int32)})

@@ -103,6 +103,11 @@ def _decode_cfg(buf) -> dict:
 class JAGIndex:
     """A built Joint Attribute Graph over (vectors, attributes)."""
 
+    # Data epoch of a frozen index: never changes. The streaming layer
+    # (repro.stream.StreamingJAGIndex) shadows this with a live counter so
+    # the executor's epoch-aware caches invalidate as the index grows.
+    epoch: int = 0
+
     def __init__(self, xb, attr: AttrTable, graph, degree, entry,
                  cfg: JAGConfig, build_cfg: BuildConfig):
         self.xb = jnp.asarray(xb)
@@ -257,14 +262,14 @@ class JAGIndex:
         return (res, p) if return_plan else res
 
     # -- persistence ---------------------------------------------------------
-    def save(self, path: str) -> None:
-        """Persist the index; built serving state rides along losslessly.
+    def _save_arrays(self) -> dict:
+        """The index as a flat npz-ready dict (shared with repro.stream).
 
         Packed fused rows are stored as raw uint32 bit patterns
         (``packed_bits``) because the attr lanes are uint32 payloads bitcast
         into f32 — a value-level f32 round-trip could canonicalize NaNs and
         corrupt them. The calibrated ``BuildConfig`` and any computed int8
-        quantization are persisted too, so :meth:`load` restores the exact
+        quantization are included too, so :meth:`load` restores the exact
         build parameters and never re-quantizes.
         """
         extra = {}
@@ -278,8 +283,7 @@ class JAGIndex:
             extra["q8__codes"] = np.asarray(xq)
             extra["q8__scale"] = np.asarray(scale)
             extra["q8__norms"] = np.asarray(xq_norm)
-        np.savez_compressed(
-            path,
+        return dict(
             xb=np.asarray(self.xb), graph=np.asarray(self.graph),
             degree=np.asarray(self.degree), entry=np.asarray(self.entry),
             attr_kind=self.attr.kind, attr_nbits=self.attr.n_bits,
@@ -289,9 +293,14 @@ class JAGIndex:
                for k, v in self.attr.data.items()},
             **extra)
 
+    def save(self, path: str) -> None:
+        """Persist the index; built serving state rides along losslessly."""
+        np.savez_compressed(path, **self._save_arrays())
+
     @classmethod
-    def load(cls, path: str) -> "JAGIndex":
-        z = np.load(path, allow_pickle=False)
+    def _from_npz(cls, z) -> "JAGIndex":
+        """Rebuild an index from a loaded npz mapping (shared with load and
+        the streaming archive format, which adds ``stream__*`` keys)."""
         cfg = JAGConfig(**_decode_cfg(z["cfg"]))
         # archives predating the build_cfg fix fall back to defaults
         bcfg = (BuildConfig(**_decode_cfg(z["build_cfg"]))
@@ -317,6 +326,10 @@ class JAGIndex:
                        jnp.asarray(z["q8__scale"]),
                        jnp.asarray(z["q8__norms"]))
         return idx
+
+    @classmethod
+    def load(cls, path: str) -> "JAGIndex":
+        return cls._from_npz(np.load(path, allow_pickle=False))
 
     # -- stats ---------------------------------------------------------------
     def degree_stats(self):

@@ -9,10 +9,11 @@ sub-batches and scatters the results back into original order; executor.py
 owns the single jit cache behind every route (prefilter | graph |
 postfilter) and every public ``JAGIndex.search*`` entry point.
 """
-from .dispatch import dispatch_per_query, regroup, run_route
+from .dispatch import dispatch_per_query, merge_topk, regroup, run_route
 from .engine import FusedEngine, make_fetch_fn
 from .executor import Executor
-from .layout import FusedLayout, build_layout, load_layout, save_layout
+from .layout import (FusedLayout, build_layout, extend_layout, load_layout,
+                     save_layout)
 from .planner import (GroupPlan, Plan, PerQueryPlan, PlannerConfig, ROUTES,
                       choose_route, estimate_selectivity, explain, plan,
                       plan_per_query, sample_ids)
@@ -20,6 +21,6 @@ from .planner import (GroupPlan, Plan, PerQueryPlan, PlannerConfig, ROUTES,
 __all__ = ["Executor", "FusedEngine", "FusedLayout", "GroupPlan", "Plan",
            "PerQueryPlan", "PlannerConfig", "ROUTES", "build_layout",
            "choose_route", "dispatch_per_query", "estimate_selectivity",
-           "explain", "load_layout", "make_fetch_fn", "plan",
-           "plan_per_query", "regroup", "run_route", "sample_ids",
-           "save_layout"]
+           "explain", "extend_layout", "load_layout", "make_fetch_fn",
+           "merge_topk", "plan", "plan_per_query", "regroup", "run_route",
+           "sample_ids", "save_layout"]

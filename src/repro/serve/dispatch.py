@@ -14,6 +14,11 @@ arXiv:2508.16263). This module closes that gap:
   3. :func:`regroup` scatters the per-group ``SearchResult``s back into
      original query order via one inverse-permutation gather per field.
 
+:func:`merge_topk` is the streaming layer's segment merge: a base route's
+top-k over the graph segment folds with the delta scan's (id-offset) top-k
+into one exact top-k per query — bit-identical to scanning the
+concatenated base+delta database with the base route exact on its segment.
+
 Regrouping relies on the normalized SearchResult contract: every field is
 leading-dim-[B] and ``vlog`` may be ANY width (the prefilter scan has no
 traversal and emits ``[B, 0]``; graph/postfilter emit ``[B, max_iters]``)
@@ -30,6 +35,7 @@ principle tile low-order float bits differently per batch size.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -37,7 +43,7 @@ from ..core.beam_search import SearchResult
 from ..core.filters import FilterBatch
 from .planner import PerQueryPlan
 
-__all__ = ["dispatch_per_query", "regroup", "run_route"]
+__all__ = ["dispatch_per_query", "merge_topk", "regroup", "run_route"]
 
 
 def run_route(executor, route: str, queries, filt: FilterBatch, *, k: int,
@@ -59,6 +65,31 @@ def run_route(executor, route: str, queries, filt: FilterBatch, *, k: int,
         return executor.postfilter(queries, filt, k=k, ls=ls,
                                    max_iters=max_iters)
     raise ValueError(f"unknown route {route!r}")
+
+
+def merge_topk(base: SearchResult, extra: SearchResult, *,
+               k: int) -> SearchResult:
+    """Exact per-query merge of two top-k lists over disjoint id segments.
+
+    The streaming layer's segment merge: ``base`` holds a route's top-k over
+    the graph segment, ``extra`` the delta scan's top-k (ids already offset
+    past the graph segment). Both order valid entries by the lexicographic
+    (primary, secondary) key with -1 padding at (INF, INF), so one stable
+    sort over the concatenation yields the exact top-k of the union —
+    ties (primary, secondary) resolve to ``base`` entries first, matching a
+    brute-force scan that visits base rows before delta rows.
+
+    Traversal telemetry composes: ``vlog``/``n_expanded`` come from ``base``
+    plus any expansions ``extra`` logged (the delta scan logs none), and
+    ``n_dist`` sums — both segments' distance computations are real work.
+    """
+    prim = jnp.concatenate([base.primary, extra.primary], axis=1)
+    sec = jnp.concatenate([base.secondary, extra.secondary], axis=1)
+    ids = jnp.concatenate([base.ids, extra.ids], axis=1)
+    prim, sec, ids = jax.lax.sort((prim, sec, ids), num_keys=2)
+    return SearchResult(ids[:, :k], prim[:, :k], sec[:, :k], base.vlog,
+                        base.n_expanded + extra.n_expanded,
+                        base.n_dist + extra.n_dist)
 
 
 def regroup(parts, groups, batch: int) -> SearchResult:

@@ -25,9 +25,21 @@ Routes (serve/planner.py owns the router that picks between them):
                serving layout, f32 or int8 vector lanes.
   postfilter — unfiltered traversal with an oversampled beam, the filter
                applied to the survivors (near-1.0 selectivity).
+  delta      — exact masked scan over a streaming index's live delta
+               segment (ids offset past the graph segment). Only available
+               when the executor's index exposes one
+               (repro.stream.StreamingJAGIndex); ``merge`` folds its top-k
+               into any base route's result, exactly.
+
+Every cache is **epoch-aware**: keys are stored under the index's data
+epoch (``JAGIndex.epoch`` is 0 forever; a ``StreamingJAGIndex`` bumps its
+counter on every insert batch and compaction), and a rolled epoch evicts
+all compiled routes, sample-probe buffers, and engines — a grown index can
+never route on a stale-n probe or serve from a pre-compaction layout.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable, Tuple
 
 import jax
@@ -57,16 +69,41 @@ class Executor:
         self._cache: dict = {}
         self._engines: dict = {}
         self._samples: dict = {}
+        self._cache_epoch: int = self.epoch
 
     # -- cache plumbing ----------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        """The index's data epoch (0 forever for a frozen JAGIndex)."""
+        return getattr(self.index, "epoch", 0)
+
+    def _roll_epoch(self) -> None:
+        """Evict every cache built against a previous data epoch.
+
+        Compiled routes, sample-probe device buffers, and fused engines all
+        reference epoch-dependent data (live attr table shape, delta
+        segment, post-compaction base arrays), so a bumped epoch invalidates
+        all three wholesale. Frozen indexes never roll.
+        """
+        e = self.epoch
+        if e != self._cache_epoch:
+            self._cache.clear()
+            self._samples.clear()
+            self._engines.clear()
+            self._cache_epoch = e
+
     def sample_ids(self, n: int, n_samples: int, seed: int = 0):
         """Planner probe rows, cached per executor (so per index).
 
         Replaces the former module-level ``functools.lru_cache`` on
         ``planner.sample_ids``, which pinned device buffers process-wide
         across index lifetimes and test runs; these die with the executor.
+        Keys carry the data epoch: when the attr table grows (streaming
+        insert), every cached probe buffer is evicted, so a grown index can
+        never route on a stale-n sample.
         """
-        key = (n, n_samples, seed)
+        self._roll_epoch()
+        key = (self._cache_epoch, n, n_samples, seed)
         ids = self._samples.get(key)
         if ids is None:
             from .planner import sample_ids
@@ -78,18 +115,26 @@ class Executor:
 
         ``make()`` must return the pure function to ``jax.jit``; it is only
         invoked on a cache miss, so closure-captured statics (k, ls, ...)
-        must be part of ``key``.
+        must be part of ``key``. Keys are stored under the current data
+        epoch (``(epoch,) + key``); rolling the epoch evicts them all.
         """
-        fn = self._cache.get(key)
+        self._roll_epoch()
+        fn = self._cache.get((self._cache_epoch,) + key)
         if fn is None:
-            fn = self._cache[key] = jax.jit(make())
+            fn = self._cache[(self._cache_epoch,) + key] = jax.jit(make())
         return fn(*args)
 
-    def cache_keys(self) -> Tuple:
-        return tuple(self._cache)
+    def cache_keys(self, full: bool = False) -> Tuple:
+        """Route keys of every live compilation (current epoch only).
+
+        ``full=True`` keeps the leading epoch component on each key.
+        """
+        return tuple(self._cache) if full else tuple(
+            k[1:] for k in self._cache)
 
     def engine(self, vec_dtype: str = "f32", **kw) -> FusedEngine:
         """FusedEngine over the index's packed layout (metadata + fetch)."""
+        self._roll_epoch()
         key = (vec_dtype, tuple(sorted(kw.items())))
         if key not in self._engines:
             self._engines[key] = FusedEngine(
@@ -182,10 +227,12 @@ class Executor:
                         jnp.asarray(queries), idx.entry)
 
     # -- prefilter route (masked exact scan) -------------------------------
-    def prefilter(self, queries, filt: FilterBatch, *, k: int,
-                  block: int = 4096, use_kernel: bool | None = None
-                  ) -> SearchResult:
-        """Exact masked scan adapted to the SearchResult contract.
+    def _scan(self, key: Tuple, xb, attr, queries, filt: FilterBatch, *,
+              k: int, block: int, use_kernel: bool,
+              offset: int = 0) -> SearchResult:
+        """Exact masked scan adapted to the SearchResult contract — the one
+        adapter behind both scan routes (prefilter over the base rows,
+        delta over the streaming segment with an id offset).
 
         primary is 0 where a valid neighbor was found (the scan only ever
         returns filter-passing points), INF on -1 padding; n_dist counts
@@ -194,6 +241,26 @@ class Executor:
         normalized contract (SearchResult.vlog may be any width; the
         per-query dispatcher pads groups to a common width when it
         regroups routes).
+        """
+        def make():
+            def run(xb, attr, q, filt):
+                gt = exact_filtered_knn(xb, attr, q, filt, k=k, block=block,
+                                        use_kernel=use_kernel)
+                B = q.shape[0]
+                ids = (gt.ids if offset == 0
+                       else jnp.where(gt.ids >= 0, gt.ids + offset, -1))
+                prim = jnp.where(gt.ids >= 0, jnp.float32(0.0), INF)
+                return SearchResult(ids, prim, gt.d2,
+                                    jnp.zeros((B, 0), jnp.int32),
+                                    jnp.zeros((B,), jnp.int32), gt.n_dist)
+            return run
+        return self.run(key, make, xb, attr, jnp.asarray(queries), filt)
+
+    def prefilter(self, queries, filt: FilterBatch, *, k: int,
+                  block: int = 4096, use_kernel: bool | None = None
+                  ) -> SearchResult:
+        """Masked exact scan over the index's (graph-segment) rows.
+
         ``use_kernel`` defaults by backend (the Pallas tile scan on TPU,
         the XLA matmul scan elsewhere), matching the kernels convention.
         """
@@ -202,19 +269,51 @@ class Executor:
         idx = self.index
         key = ("prefilter", "default", "f32", k, 0, 0, filt.kind, block,
                use_kernel)
+        return self._scan(key, idx.xb, idx.attr, queries, filt, k=k,
+                          block=block, use_kernel=use_kernel)
 
-        def make():
-            def run(xb, attr, q, filt):
-                gt = exact_filtered_knn(xb, attr, q, filt, k=k, block=block,
-                                        use_kernel=use_kernel)
-                B = q.shape[0]
-                prim = jnp.where(gt.ids >= 0, jnp.float32(0.0), INF)
-                return SearchResult(gt.ids, prim, gt.d2,
-                                    jnp.zeros((B, 0), jnp.int32),
-                                    jnp.zeros((B,), jnp.int32), gt.n_dist)
-            return run
-        return self.run(key, make, idx.xb, idx.attr, jnp.asarray(queries),
-                        filt)
+    # -- delta route (streaming: exact scan over the live delta segment) ---
+    def delta(self, queries, filt: FilterBatch, *, k: int,
+              block: int = 4096, use_kernel: bool | None = None
+              ) -> SearchResult:
+        """Exact masked scan over the index's delta segment, ids offset.
+
+        The streaming layer's fourth route: the delta segment is small (it
+        is compacted into the graph before it exceeds a fraction of N), so
+        a brute-force scan — the same primitive as the prefilter route —
+        is both exact and cheap. Returned ids live past the graph segment
+        (``+ base_n``), so ``merge`` can fold them into any base route's
+        top-k as if the concatenated database had been searched.
+
+        Requires the index to expose ``delta_arrays() -> (xv, attr, offset)``
+        (repro.stream.StreamingJAGIndex); frozen indexes have no delta.
+        """
+        if not hasattr(self.index, "delta_arrays"):
+            raise TypeError("delta route needs a streaming index exposing "
+                            "delta_arrays(); JAGIndex is frozen")
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        xv, dattr, offset = self.index.delta_arrays()
+        # the scan pads to whole blocks — cap at the (small) delta row count
+        # so a 60-row delta never pays a 4096-wide distance matrix
+        block = max(1, min(block, int(xv.shape[0])))
+        key = ("delta", "default", "f32", k, 0, 0, filt.kind, block,
+               use_kernel, offset)
+        return self._scan(key, xv, dattr, queries, filt, k=k, block=block,
+                          use_kernel=use_kernel, offset=offset)
+
+    def merge(self, base: SearchResult, extra: SearchResult, *,
+              k: int) -> SearchResult:
+        """Fold two per-query top-k results into one exact top-k.
+
+        Compiled through the same cache as every route; see
+        ``serve.dispatch.merge_topk`` for the ordering contract (stable on
+        the (primary, secondary) key, ``base`` winning ties — matching a
+        brute-force scan of base rows before delta rows).
+        """
+        from .dispatch import merge_topk
+        key = ("merge", "default", "f32", k, 0, 0, None)
+        return self.run(key, lambda: partial(merge_topk, k=k), base, extra)
 
     # -- postfilter route (oversampled unfiltered beam + filter) -----------
     def postfilter(self, queries, filt: FilterBatch, *, k: int, ls: int,

@@ -105,6 +105,31 @@ def build_layout(xb, attr: AttrTable, *,
                        int(x32.shape[1]), vec_dtype)
 
 
+def extend_layout(layout: FusedLayout, xv, attr: AttrTable) -> FusedLayout:
+    """Append delta rows to a packed f32 layout without re-packing base rows.
+
+    Streaming compaction folds the delta segment into the graph; the fused
+    f32 layout extends row-wise (vec lanes are stored values, the norm is
+    per-row, attr words are per-row bit payloads), so packing ONLY the new
+    rows reproduces ``build_layout(concat(base, delta))`` bit-for-bit at
+    O(delta) cost. int8 layouts do NOT extend: their per-dim quantization
+    scale is global, so appended rows would need a re-quantization of the
+    whole database — callers rebuild those lazily instead.
+    """
+    if layout.vec_dtype != "f32":
+        raise ValueError("only f32 layouts extend losslessly; rebuild int8 "
+                         "layouts after compaction (global quant scale)")
+    if attr.kind != layout.kind or attr.n_bits != layout.n_bits:
+        raise ValueError(f"attr rows are {attr.kind}/{attr.n_bits}, layout "
+                         f"is {layout.kind}/{layout.n_bits}")
+    x32 = jnp.asarray(xv).astype(jnp.float32)
+    norm = jnp.sum(x32 * x32, axis=-1)
+    words = pack_attr_words(attr)
+    rows = jnp.concatenate([x32, norm[:, None], words], axis=1)
+    return dataclasses.replace(
+        layout, packed=jnp.concatenate([layout.packed, rows], axis=0))
+
+
 def save_layout(path: str, layout: FusedLayout) -> None:
     """Persist a packed layout (npz; lossless — attr lanes are bit payloads).
 

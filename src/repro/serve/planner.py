@@ -28,6 +28,13 @@ Two planning granularities share the probe:
 ``JAGIndex.search_auto`` is the end-to-end entry point (default
 ``mode="per_query"``); thresholds live in ``PlannerConfig`` (static today —
 cost-model-driven thresholds remain a ROADMAP open item).
+
+Streaming: both planners probe whatever attribute table they are handed —
+``StreamingJAGIndex.search_auto`` passes the live base+delta table, so the
+selectivity estimate tracks inserted rows immediately. The probe's device
+buffers and compilation live in the executor's epoch-aware caches
+(``Executor.sample_ids`` / ``Executor.run``): an insert bumps the index
+epoch and evicts them, so routing can never consult a stale-n sample.
 """
 from __future__ import annotations
 

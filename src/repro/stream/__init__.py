@@ -1,0 +1,12 @@
+"""Streaming-insert subsystem: live delta segment over the frozen graph.
+
+``StreamingJAGIndex`` wraps a built ``JAGIndex`` with a growable
+``DeltaSegment`` and an epoch counter; inserts are O(1) amortized appends,
+searches merge the planner-routed graph result with an exact delta scan,
+and compaction folds the delta into the graph with the build's batch-insert
+primitive. See stream/index.py for the full architecture notes.
+"""
+from .delta import DeltaSegment
+from .index import StreamingJAGIndex
+
+__all__ = ["DeltaSegment", "StreamingJAGIndex"]

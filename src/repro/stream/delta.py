@@ -1,0 +1,118 @@
+"""Growable delta segment: (vectors, attr rows) appended in O(1) amortized.
+
+The mutable half of a :class:`~repro.stream.StreamingJAGIndex`. Appends land
+in host-side numpy buffers that double in capacity (classic amortized O(1)
+batch growth — redisvl-style index lifecycle, where ``append`` never blocks
+on a rebuild); the device-side view (a jnp vector block + an
+``AttrTable`` over exactly the live rows) is materialized lazily and cached
+until the next append. Searching the segment is a brute-force masked scan
+(the executor's ``delta`` route), which is exact and — because compaction
+folds the delta into the graph before it exceeds a configurable fraction of
+N — never scans more than that fraction of the database.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.filters import AttrTable
+
+_MIN_CAPACITY = 64
+
+
+class DeltaSegment:
+    """Append-only (vectors, attributes) buffer with doubling capacity.
+
+    Host buffers are the source of truth (persistence serializes them
+    directly); ``device()`` returns the jnp view the delta-scan route
+    consumes. ``bit_weights`` never lives here — it is a global (not
+    per-point) array owned by the base table.
+    """
+
+    def __init__(self, kind: str, n_bits: int, d: int,
+                 attr_template: Dict[str, Tuple[np.dtype, tuple]]):
+        self.kind = kind
+        self.n_bits = int(n_bits)
+        self.d = int(d)
+        self._template = dict(attr_template)
+        self.n = 0
+        self._cap = 0
+        self._xv = np.empty((0, self.d), np.float32)
+        self._attr = {k: np.empty((0,) + shape, dt)
+                      for k, (dt, shape) in self._template.items()}
+        self._device: Optional[Tuple[jnp.ndarray, AttrTable]] = None
+
+    @classmethod
+    def for_table(cls, table: AttrTable, d: int) -> "DeltaSegment":
+        """An empty segment shaped like ``table``'s per-point rows."""
+        template = {k: (np.asarray(v).dtype, np.asarray(v).shape[1:])
+                    for k, v in table.data.items() if k != "bit_weights"}
+        return cls(table.kind, table.n_bits, d, template)
+
+    def _grow(self, need: int) -> None:
+        cap = max(self._cap, _MIN_CAPACITY)
+        while cap < need:
+            cap *= 2
+        if cap == self._cap:
+            return
+        xv = np.empty((cap, self.d), np.float32)
+        xv[:self.n] = self._xv[:self.n]
+        self._xv = xv
+        for k, (dt, shape) in self._template.items():
+            buf = np.empty((cap,) + shape, dt)
+            buf[:self.n] = self._attr[k][:self.n]
+            self._attr[k] = buf
+        self._cap = cap
+
+    def append(self, vectors, attrs: AttrTable) -> int:
+        """Append a batch of rows; returns the new row count.
+
+        ``attrs`` must be an AttrTable of the segment's kind holding one
+        row per appended vector (build one with the ``core.filters``
+        constructors — ``range_table``, ``subset_table``, ...).
+        """
+        xv = np.asarray(vectors, np.float32)
+        if xv.ndim != 2 or xv.shape[1] != self.d:
+            raise ValueError(f"vectors must be [M, {self.d}], "
+                             f"got {xv.shape}")
+        if attrs.kind != self.kind or attrs.n_bits != self.n_bits:
+            raise ValueError(f"attr rows are {attrs.kind}/{attrs.n_bits}, "
+                             f"segment is {self.kind}/{self.n_bits}")
+        if attrs.n != xv.shape[0]:
+            raise ValueError(f"{xv.shape[0]} vectors vs {attrs.n} attr rows")
+        m = xv.shape[0]
+        self._grow(self.n + m)
+        self._xv[self.n:self.n + m] = xv
+        for k in self._template:
+            self._attr[k][self.n:self.n + m] = np.asarray(attrs.data[k])
+        self.n += m
+        self._device = None
+        return self.n
+
+    def rows(self) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Host copies of exactly the live rows (persistence)."""
+        return (self._xv[:self.n].copy(),
+                {k: v[:self.n].copy() for k, v in self._attr.items()})
+
+    def device(self) -> Tuple[jnp.ndarray, AttrTable]:
+        """(vectors jnp [n, d], AttrTable over the n live rows), cached
+        until the next append."""
+        if self._device is None:
+            self._device = (
+                jnp.asarray(self._xv[:self.n]),
+                AttrTable(self.kind,
+                          {k: jnp.asarray(v[:self.n])
+                           for k, v in self._attr.items()},
+                          self.n_bits))
+        return self._device
+
+    def reset(self) -> None:
+        """Drop every row (post-compaction); capacity is released too."""
+        self.n = 0
+        self._cap = 0
+        self._xv = np.empty((0, self.d), np.float32)
+        self._attr = {k: np.empty((0,) + shape, dt)
+                      for k, (dt, shape) in self._template.items()}
+        self._device = None

@@ -113,6 +113,59 @@ def test_prune_respects_degree_and_alpha():
         assert got == set(np.flatnonzero(sel[b]))
 
 
+def test_load_legacy_archive_without_build_cfg(small_index, tmp_path):
+    """Archives predating the ``build_cfg`` field load with defaults.
+
+    ``JAGIndex.load`` falls back to ``BuildConfig()`` when the archive has
+    no ``build_cfg`` key (the ``if "build_cfg" in z`` branch) — exercised
+    here by stripping the key from a fresh archive. Everything else must
+    round-trip: graph/vectors/attrs bit-for-bit and identical search
+    results (search never consults build_cfg).
+    """
+    from repro.core.build import BuildConfig
+    idx, xb, vals = small_index
+    full = str(tmp_path / "full.npz")
+    legacy = str(tmp_path / "legacy.npz")
+    idx.save(full)
+    with np.load(full, allow_pickle=False) as z:
+        assert "build_cfg" in z
+        stripped = {k: z[k] for k in z.files if k != "build_cfg"}
+    np.savez_compressed(legacy, **stripped)
+
+    from repro.core import JAGIndex
+    got = JAGIndex.load(legacy)
+    assert got.build_cfg == BuildConfig()            # fallback defaults
+    assert got.cfg == idx.cfg                        # JAGConfig still exact
+    np.testing.assert_array_equal(np.asarray(got.graph),
+                                  np.asarray(idx.graph))
+    np.testing.assert_array_equal(np.asarray(got.xb), np.asarray(idx.xb))
+    for k, v in idx.attr.data.items():
+        np.testing.assert_array_equal(np.asarray(got.attr.data[k]),
+                                      np.asarray(v))
+    rng = np.random.default_rng(12)
+    q = xb[rng.integers(0, len(xb), 8)] + 0.01
+    filt = range_filters(np.zeros(8, np.float32),
+                         np.full(8, 500.0, np.float32))
+    want = idx.search(q, filt, k=10, ls=64)
+    res = got.search(q, filt, k=10, ls=64)
+    for field in ("ids", "primary", "secondary", "n_dist"):
+        np.testing.assert_array_equal(np.asarray(getattr(res, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
+
+
+def test_save_load_round_trips_calibrated_build_cfg(small_index, tmp_path):
+    """The modern path: the CALIBRATED BuildConfig (absolute thresholds,
+    not the quantile spec) survives save -> load exactly."""
+    from repro.core import JAGIndex
+    idx, *_ = small_index
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    got = JAGIndex.load(path)
+    assert got.build_cfg == idx.build_cfg
+    assert got.build_cfg.thresholds == idx.build_cfg.thresholds
+
+
 def test_medoid():
     xb = np.array([[0, 0], [10, 0], [0, 10], [3, 3]], np.float32)
     assert int(medoid(jnp.asarray(xb))) == 3

@@ -81,6 +81,71 @@ def test_filter_batch_take_matches_lanes(kind):
                                           err_msg=(kind, key, int(i)))
 
 
+def _kind_filters(kind, rng):
+    if kind == F.LABEL:
+        return F.label_filters(rng.integers(0, 5, B))
+    if kind == F.RANGE:
+        lo = rng.uniform(0, 0.4, B).astype(np.float32)
+        return F.range_filters(lo, lo + 0.3)
+    if kind == F.SUBSET:
+        return F.subset_filters(rng.random((B, 24)) < 0.2, 24)
+    sat = rng.random((B, 1 << 6)) < 0.3
+    return F.boolean_filters(sat, 6)
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_filter_batch_take_empty_singleton_full(kind):
+    """Degenerate group shapes the end-to-end router happens not to hit:
+    an EMPTY id set (0-query sub-batch), a singleton, and the full batch
+    (identity gather) — all four filter kinds."""
+    rng = np.random.default_rng(5)
+    filt = _kind_filters(kind, rng)
+
+    empty = filt.take(np.array([], np.int32))
+    assert empty.batch == 0
+    assert empty.kind == filt.kind and empty.n_bits == filt.n_bits
+    for key, v in filt.data.items():
+        got = np.asarray(empty.data[key])
+        assert got.shape == (0,) + np.asarray(v).shape[1:], (key, got.shape)
+        assert got.dtype == np.asarray(v).dtype
+
+    one = filt.take(np.array([B - 1], np.int32))
+    assert one.batch == 1
+    for key in filt.data:
+        np.testing.assert_array_equal(
+            np.asarray(one.data[key]),
+            np.asarray(filt.lane(B - 1).data[key]), err_msg=(kind, key))
+
+    full = filt.take(np.arange(B, dtype=np.int32))
+    assert full.batch == B
+    for key in filt.data:
+        np.testing.assert_array_equal(np.asarray(full.data[key]),
+                                      np.asarray(filt.data[key]),
+                                      err_msg=(kind, key))
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_filter_batch_take_composes_with_matches(kind):
+    """A taken sub-batch must behave like the corresponding lanes under
+    ``matches`` — the property dispatch actually relies on."""
+    rng = np.random.default_rng(8)
+    filt = _kind_filters(kind, rng)
+    if kind == F.LABEL:
+        tab = F.label_table(rng.integers(0, 5, 64))
+    elif kind == F.RANGE:
+        tab = F.range_table(rng.uniform(0, 1, 64).astype(np.float32))
+    elif kind == F.SUBSET:
+        tab = F.subset_table(rng.random((64, 24)) < 0.5, 24)
+    else:
+        tab = F.boolean_table(rng.integers(0, 1 << 6, 64).astype(np.uint32),
+                              6)
+    ids = np.array([3, 3, 0, B - 1], np.int32)
+    sub = filt.take(ids)
+    ok_sub = np.asarray(F.matches_all(sub, tab))
+    ok_full = np.asarray(F.matches_all(filt, tab))
+    np.testing.assert_array_equal(ok_sub, ok_full[ids])
+
+
 # ---------------------------------------------------------------------------
 # order invariance: per-query dispatch == each query alone on its own route
 # ---------------------------------------------------------------------------

@@ -1,0 +1,407 @@
+"""Streaming-insert subsystem: delta segment, epoch-versioned executor,
+merged exact search, compaction, and mid-stream persistence.
+
+The acceptance contract: ``StreamingJAGIndex.search_auto`` over base+delta
+returns ids/keys exactly equal to exact filtered k-NN over the concatenated
+database (asserted for every filter kind with an exact base route, before
+and after a compaction), and ``save`` -> ``load`` mid-stream preserves
+epoch, delta rows, and search results bit-for-bit.
+"""
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters as F
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.serve.planner import PlannerConfig
+from repro.stream import DeltaSegment, StreamingJAGIndex
+
+N0, D, B = 500, 10, 8
+M = 60                       # rows per insert batch
+CFG = JAGConfig(degree=16, ls_build=32, batch_size=128, cand_pool=64,
+                calib_samples=64, n_seeds=8)
+# routes every query to the (exact) prefilter scan -> merged result must be
+# bit-equal to brute force over the concatenated database at ANY selectivity
+EXACT_PLANNER = PlannerConfig(prefilter_max_sel=1.1)
+_SEEDS = {F.LABEL: 101, F.RANGE: 202, F.SUBSET: 303, F.BOOLEAN: 404}
+
+
+def _rows(kind, rng, n):
+    """(vectors, AttrTable) of n fresh rows for one filter kind."""
+    xv = rng.normal(size=(n, D)).astype(np.float32)
+    if kind == F.RANGE:
+        tab = F.range_table(rng.uniform(0, 1, n).astype(np.float32))
+    elif kind == F.LABEL:
+        tab = F.label_table(rng.integers(0, 6, n))
+    elif kind == F.SUBSET:
+        tab = F.subset_table(rng.random((n, 24)) < 0.5, 24)
+    else:
+        tab = F.boolean_table(rng.integers(0, 1 << 8, n).astype(np.uint32), 8)
+    return xv, tab
+
+
+def _filters(kind, rng, sel):
+    """A filter batch with roughly the requested selectivity."""
+    if kind == F.RANGE:
+        return F.range_filters(np.zeros(B), np.full(B, sel, np.float32))
+    if kind == F.LABEL:
+        return F.label_filters(np.full(B, 2))          # ~1/6 of rows
+    if kind == F.SUBSET:
+        m = max(0, round(-np.log2(max(sel, 2 ** -9))))  # sel ~ 2^-m
+        fb = np.zeros((B, 24), bool)
+        fb[:, :m] = True
+        return F.subset_filters(fb, 24)
+    size = 1 << 8
+    sat = np.zeros((B, size), bool)
+    for i in range(B):
+        sat[i, rng.choice(size, max(1, int(sel * size)), replace=False)] = 1
+    return F.boolean_filters(sat, 8)
+
+
+@functools.lru_cache(maxsize=None)
+def _base(kind):
+    """One frozen base index + queries per kind, cached across tests."""
+    rng = np.random.default_rng(_SEEDS[kind])
+    xb, tab = _rows(kind, rng, N0)
+    base = JAGIndex.build(xb, tab, CFG)
+    q = (xb[rng.integers(0, N0, B)]
+         + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+    return base, q
+
+
+def _setup(kind, compact_frac=0.0):
+    """A FRESH streaming wrapper per test — inserts must not leak between
+    tests through the cached base (compaction replaces ``.base`` with a new
+    index, never mutates the shared one)."""
+    base, q = _base(kind)
+    return StreamingJAGIndex(base, compact_frac=compact_frac), q
+
+
+def _gt(idx, q, filt):
+    """Exact filtered k-NN over the live concatenated database."""
+    xv, dattr, _ = idx.delta_arrays()
+    xb = jnp.concatenate([jnp.asarray(idx.base.xb), xv], axis=0)
+    return exact_filtered_knn(xb, idx.attr, jnp.asarray(q), filt, k=10)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: merged search == exact k-NN over concat, every kind, every
+# epoch, before AND after compaction; save/load mid-stream is bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+@pytest.mark.parametrize("sel", [0.01, 0.5])
+def test_search_auto_exact_over_base_plus_delta(kind, sel):
+    idx, q = _setup(kind)
+    rng = np.random.default_rng(1000 + _SEEDS[kind])
+    filt = _filters(kind, rng, sel)
+    for _ in range(2):                       # two insert epochs
+        idx.insert(*_rows(kind, rng, M), auto_compact=False)
+        res = idx.search_auto(q, filt, k=10, ls=64, planner=EXACT_PLANNER)
+        gt = _gt(idx, q, filt)
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(gt.ids))
+        np.testing.assert_array_equal(np.asarray(res.secondary),
+                                      np.asarray(gt.d2))
+        assert (np.asarray(res.primary)[np.asarray(res.ids) >= 0] == 0).all()
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_exactness_preserved_across_compaction(kind):
+    idx, q = _setup(kind)
+    rng = np.random.default_rng(2000 + _SEEDS[kind])
+    filt = _filters(kind, rng, 0.3)
+    idx.insert(*_rows(kind, rng, M), auto_compact=False)
+    pre = idx.search_auto(q, filt, k=10, ls=64, planner=EXACT_PLANNER)
+    gt_pre = _gt(idx, q, filt)
+    np.testing.assert_array_equal(np.asarray(pre.ids), np.asarray(gt_pre.ids))
+    e0, n0 = idx.epoch, idx.n
+    assert idx.compact()
+    assert idx.epoch == e0 + 1 and idx.delta.n == 0
+    assert int(idx.base.xb.shape[0]) == n0          # ids are stable
+    post = idx.search_auto(q, filt, k=10, ls=64, planner=EXACT_PLANNER)
+    gt_post = _gt(idx, q, filt)
+    np.testing.assert_array_equal(np.asarray(post.ids),
+                                  np.asarray(gt_post.ids))
+    np.testing.assert_array_equal(np.asarray(gt_pre.ids),
+                                  np.asarray(gt_post.ids))
+    # graph invariants hold for the folded rows too
+    st = idx.base.degree_stats()
+    assert st["over_budget"] == 0 and st["max"] <= CFG.degree
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_save_load_mid_stream_bit_for_bit(kind, tmp_path):
+    idx, q = _setup(kind)
+    rng = np.random.default_rng(3000 + _SEEDS[kind])
+    idx.insert(*_rows(kind, rng, M), auto_compact=False)
+    filt = _filters(kind, rng, 0.4)
+    want = idx.search_auto(q, filt, k=10, ls=64)
+    path = str(tmp_path / "stream.npz")
+    idx.save(path)
+    idx2 = StreamingJAGIndex.load(path)
+    assert idx2.epoch == idx.epoch
+    assert idx2.delta.n == idx.delta.n
+    assert idx2.n_compactions == idx.n_compactions
+    xv0, at0 = idx.delta.rows()
+    xv1, at1 = idx2.delta.rows()
+    np.testing.assert_array_equal(xv0, xv1)
+    for k in at0:
+        np.testing.assert_array_equal(at0[k], at1[k])
+    got = idx2.search_auto(q, filt, k=10, ls=64)
+    for field in want._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
+
+
+def test_frozen_archive_loads_as_streaming(tmp_path):
+    idx, _ = _setup(F.RANGE)
+    path = str(tmp_path / "frozen.npz")
+    idx.base.save(path)
+    s = StreamingJAGIndex.load(path)
+    assert s.epoch == 0 and s.delta.n == 0
+    assert int(s.base.xb.shape[0]) == int(idx.base.xb.shape[0])
+
+
+def test_legacy_archive_refuses_compaction_but_serves(tmp_path):
+    """An archive predating ``build_cfg`` loads with DEFAULT build params
+    (row width 48 vs this graph's 32) — compaction must refuse loudly
+    instead of folding rows at the wrong degree, while inserts and merged
+    searches keep working."""
+    idx, q = _setup(F.RANGE)
+    rng = np.random.default_rng(83)
+    full = str(tmp_path / "full.npz")
+    legacy = str(tmp_path / "legacy.npz")
+    idx.save(full)
+    with np.load(full, allow_pickle=False) as z:
+        np.savez_compressed(legacy,
+                            **{k: z[k] for k in z.files if k != "build_cfg"})
+    s = StreamingJAGIndex.load(legacy)
+    assert s.build_cfg.row_width != int(s.base.graph.shape[1])
+    s.insert(*_rows(F.RANGE, rng, M), auto_compact=False)
+    filt = _filters(F.RANGE, rng, 0.3)
+    res = s.search_auto(q, filt, k=10, ls=64, planner=EXACT_PLANNER)
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  np.asarray(_gt(s, q, filt).ids))
+    with pytest.raises(ValueError, match="row width"):
+        s.compact()
+
+
+# ---------------------------------------------------------------------------
+# merge semantics: streaming search == base route + delta brute, composed
+# ---------------------------------------------------------------------------
+
+def test_graph_route_merge_matches_manual_composition():
+    idx, q = _setup(F.RANGE)
+    rng = np.random.default_rng(41)
+    idx.insert(*_rows(F.RANGE, rng, M), auto_compact=False)
+    filt = _filters(F.RANGE, rng, 0.4)
+    res = idx.search(q, filt, k=10, ls=64)
+    ex = idx.executor
+    base = ex.graph(q, filt, k=10, ls=64, max_iters=128)
+    extra = ex.delta(q, filt, k=10)
+    want = ex.merge(base, extra, k=10)
+    for field in res._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(res, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=field)
+    # delta ids live past the graph segment and appear when they should
+    assert (np.asarray(extra.ids)[np.asarray(extra.ids) >= 0]
+            >= idx.base.xb.shape[0]).all()
+    assert np.asarray(res.n_dist).min() > 0
+
+
+def test_delta_route_requires_streaming_index():
+    idx, q = _setup(F.RANGE)
+    filt = _filters(F.RANGE, np.random.default_rng(0), 0.4)
+    with pytest.raises(TypeError, match="frozen"):
+        idx.base.executor.delta(q, filt, k=5)
+
+
+def test_int8_streaming_search_returns_delta_hits():
+    idx, q = _setup(F.RANGE)
+    rng = np.random.default_rng(43)
+    idx.insert(*_rows(F.RANGE, rng, M), auto_compact=False)
+    filt = _filters(F.RANGE, rng, 0.9)
+    res = idx.search_int8(q, filt, k=10, ls=96)
+    assert (np.asarray(res.ids)[:, 0] >= 0).all()
+    rf = idx.search(q, filt, k=10, ls=96)
+    same = np.mean([len(set(np.asarray(res.ids)[i])
+                        & set(np.asarray(rf.ids)[i])) / 10
+                    for i in range(B)])
+    assert same > 0.8, same
+
+
+# ---------------------------------------------------------------------------
+# epoch-versioned executor: stale caches can never serve a grown index
+# ---------------------------------------------------------------------------
+
+def test_insert_bumps_epoch_and_rolls_executor_caches():
+    idx, q = _setup(F.RANGE)
+    rng = np.random.default_rng(47)
+    filt = _filters(F.RANGE, rng, 0.4)
+    idx.search_auto(q, filt, k=5, ls=32)
+    ex = idx.executor
+    assert len(ex.cache_keys()) > 0
+    assert all(k[0] == idx.epoch for k in ex.cache_keys(full=True))
+    e0 = idx.epoch
+    idx.insert(*_rows(F.RANGE, rng, M), auto_compact=False)
+    assert idx.epoch == e0 + 1
+    idx.search_auto(q, filt, k=5, ls=32)
+    # every live compilation and sample buffer belongs to the NEW epoch
+    assert all(k[0] == idx.epoch for k in ex.cache_keys(full=True))
+    assert all(key[0] == idx.epoch for key in ex._samples)
+    # ... and every probe buffer was drawn over the grown row count
+    assert all(key[1] == idx.n for key in ex._samples)
+
+
+def test_planner_probe_tracks_live_attr_table():
+    """A filter matching ONLY delta rows must route on the live table and
+    return delta hits — the stale-n probe would estimate selectivity 0."""
+    idx, q = _setup(F.RANGE)
+    rng = np.random.default_rng(53)
+    base_n = int(idx.base.xb.shape[0])
+    xv = rng.normal(size=(M, D)).astype(np.float32)
+    # delta attr values live OUTSIDE the base's [0, 1] range
+    vals = rng.uniform(2.0, 3.0, M).astype(np.float32)
+    filt = F.range_filters(np.full(B, 2.0, np.float32),
+                           np.full(B, 3.0, np.float32))
+    res0, p0 = idx.search_auto(q, filt, k=10, ls=32, return_plan=True)
+    assert float(np.max(p0.selectivity)) == 0.0
+    assert (np.asarray(res0.ids) == -1).all()
+    idx.insert(xv, F.range_table(vals), auto_compact=False)
+    res1, p1 = idx.search_auto(q, filt, k=10, ls=32, return_plan=True)
+    assert float(np.min(p1.selectivity)) > 0.0
+    assert p1.n_sampled == idx.n                 # full probe over base+delta
+    ids = np.asarray(res1.ids)
+    assert (ids[:, 0] >= base_n).all()           # hits come from the delta
+    gt = _gt(idx, q, filt)
+    np.testing.assert_array_equal(ids, np.asarray(gt.ids))
+
+
+def test_frozen_index_epoch_is_zero_and_stable():
+    idx, q = _setup(F.RANGE)
+    base = idx.base
+    assert base.epoch == 0 and base.executor.epoch == 0
+    filt = _filters(F.RANGE, np.random.default_rng(0), 0.4)
+    base.search(q, filt, k=5, ls=32)
+    n = len(base.executor.cache_keys())
+    base.search(q, filt, k=5, ls=32)
+    assert len(base.executor.cache_keys()) == n   # no roll, no recompiles
+
+
+# ---------------------------------------------------------------------------
+# compaction triggering + recall through a full insert->compact lifecycle
+# ---------------------------------------------------------------------------
+
+def test_auto_compact_triggers_at_configured_fraction():
+    idx, q = _setup(F.LABEL, compact_frac=0.2)
+    rng = np.random.default_rng(59)
+    rep1 = idx.insert(*_rows(F.LABEL, rng, 50), auto_compact=True)
+    assert not rep1["compacted"] and idx.delta.n == 50     # 10% < 20%
+    rep2 = idx.insert(*_rows(F.LABEL, rng, 60), auto_compact=True)
+    assert rep2["compacted"] and idx.delta.n == 0          # 22% > 20%
+    assert idx.n_compactions == 1
+    assert int(idx.base.xb.shape[0]) == N0 + 110
+    assert rep2["epoch"] == idx.epoch == 3   # 2 inserts + 1 compaction
+
+
+def test_streamed_recall_matches_exact_after_lifecycle():
+    """Default planner, mid selectivity: recall over a full insert ->
+    compact -> insert lifecycle stays ~exact at saturating beam width."""
+    idx, q = _setup(F.SUBSET, compact_frac=0.15)
+    rng = np.random.default_rng(61)
+    filt = _filters(F.SUBSET, rng, 0.125)
+    for _ in range(3):
+        idx.insert(*_rows(F.SUBSET, rng, 40), auto_compact=True)
+        res = idx.search_auto(q, filt, k=10, ls=160)
+        gt = _gt(idx, q, filt)
+        recs = []
+        for i in range(B):
+            want = set(np.asarray(gt.ids)[i]) - {-1}
+            if want:
+                got = set(np.asarray(res.ids)[i]) - {-1}
+                recs.append(len(want & got) / len(want))
+        assert np.mean(recs) > 0.95, (idx.epoch, np.mean(recs))
+    assert idx.n_compactions >= 1
+
+
+# ---------------------------------------------------------------------------
+# units: DeltaSegment growth + AttrTable.append + extend_layout guards
+# ---------------------------------------------------------------------------
+
+def test_delta_segment_amortized_growth_and_device_cache():
+    rng = np.random.default_rng(67)
+    tab = F.range_table(rng.uniform(0, 1, 4).astype(np.float32))
+    seg = DeltaSegment.for_table(tab, D)
+    assert seg.n == 0
+    caps = []
+    for i in range(5):
+        seg.append(rng.normal(size=(30, D)).astype(np.float32),
+                   F.range_table(rng.uniform(0, 1, 30).astype(np.float32)))
+        caps.append(seg._cap)
+    assert seg.n == 150
+    assert caps == sorted(caps) and len(set(caps)) < len(caps)  # doubling
+    xv, dattr = seg.device()
+    assert xv.shape == (150, D) and dattr.n == 150
+    assert seg.device()[0] is xv                  # cached until next append
+    seg.append(rng.normal(size=(1, D)).astype(np.float32),
+               F.range_table(np.zeros(1, np.float32)))
+    assert seg.device()[0] is not xv              # append invalidates
+    seg.reset()
+    assert seg.n == 0 and seg.device()[0].shape == (0, D)
+
+
+def test_delta_segment_validates_shapes_and_kind():
+    tab = F.range_table(np.zeros(3, np.float32))
+    seg = DeltaSegment.for_table(tab, D)
+    with pytest.raises(ValueError, match="vectors"):
+        seg.append(np.zeros((2, D + 1), np.float32),
+                   F.range_table(np.zeros(2, np.float32)))
+    with pytest.raises(ValueError, match="attr rows"):
+        seg.append(np.zeros((2, D), np.float32),
+                   F.label_table(np.zeros(2, np.int64)))
+    with pytest.raises(ValueError, match="vs"):
+        seg.append(np.zeros((2, D), np.float32),
+                   F.range_table(np.zeros(3, np.float32)))
+
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_attr_table_append_all_kinds(kind):
+    rng = np.random.default_rng(71)
+    _, a = _rows(kind, rng, 7)
+    _, b = _rows(kind, rng, 5)
+    ab = a.append(b)
+    assert ab.n == 12 and ab.kind == kind and ab.n_bits == a.n_bits
+    for k in a.data:
+        np.testing.assert_array_equal(np.asarray(ab.data[k][:7]),
+                                      np.asarray(a.data[k]))
+        np.testing.assert_array_equal(np.asarray(ab.data[k][7:]),
+                                      np.asarray(b.data[k]))
+
+
+def test_attr_table_append_keeps_global_bit_weights_and_checks_kind():
+    rng = np.random.default_rng(73)
+    w = rng.random(24).astype(np.float32)
+    a = F.subset_table(rng.random((6, 24)) < 0.5, 24, bit_weights=w)
+    b = F.subset_table(rng.random((4, 24)) < 0.5, 24)
+    ab = a.append(b)
+    assert ab.n == 10
+    np.testing.assert_array_equal(np.asarray(ab.data["bit_weights"]), w)
+    with pytest.raises(ValueError, match="append"):
+        a.append(F.range_table(np.zeros(2, np.float32)))
+
+
+def test_extend_layout_rejects_int8():
+    from repro.serve.layout import build_layout, extend_layout
+    rng = np.random.default_rng(79)
+    tab = F.range_table(rng.uniform(0, 1, 16).astype(np.float32))
+    lay = build_layout(rng.normal(size=(16, D)).astype(np.float32), tab,
+                       vec_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        extend_layout(lay, np.zeros((2, D), np.float32),
+                      F.range_table(np.zeros(2, np.float32)))
