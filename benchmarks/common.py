@@ -15,7 +15,15 @@ from repro.core import JAGConfig, JAGIndex
 from repro.core import baselines as BL
 from repro.core.ground_truth import exact_filtered_knn
 from repro.core.recall import recall_at_k
+# the shared timing discipline (explicit warmup, per-repeat
+# block_until_ready, median) — implemented in repro.cost.calibrate because
+# src must not import the repo-root benchmarks package; re-exported here so
+# every benchmark imports it from one place
+from repro.cost.calibrate import time_route
 from repro.data import synthetic as SYN
+
+__all__ = ["ALGOS", "Ctx", "DATASETS", "get_ctx", "measure", "run_algo",
+           "time_route"]
 
 # benchmark scale: CPU-feasible analogue of the paper's 1M-10M datasets
 N = 10_000
@@ -86,15 +94,17 @@ def run_algo(ctx: Ctx, algo: str, ls: int, k: int = 10):
     raise ValueError(algo)
 
 
-def measure(ctx: Ctx, algo: str, ls: int, k: int = 10, repeats: int = 2):
-    """(recall, qps, mean distance computations, us/query)."""
-    res = run_algo(ctx, algo, ls, k)            # warm + compile
-    jax.block_until_ready(res.ids)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        res = run_algo(ctx, algo, ls, k)
-        jax.block_until_ready(res.ids)
-    dt = (time.perf_counter() - t0) / repeats
+def measure(ctx: Ctx, algo: str, ls: int, k: int = 10, repeats: int = 2,
+            warmup: int = 1):
+    """(recall, qps, mean distance computations, us/query).
+
+    Timed via :func:`time_route`: ``warmup`` blocked calls absorb jit
+    compilation, then the MEDIAN of per-repeat wall times is reported —
+    the old one-``perf_counter``-over-all-repeats loop averaged compile
+    and steady-state together, which poisoned cost-model fits.
+    """
+    res, dt = time_route(lambda: run_algo(ctx, algo, ls, k),
+                         warmup=warmup, repeats=repeats)
     B = ctx.ds.queries.shape[0]
     rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
                       np.asarray(ctx.gt.ids)).mean()

@@ -1,0 +1,135 @@
+"""Cost-model calibration benchmark: fit quality + routing win, as JSON.
+
+Stage 1 runs the ``repro.cost`` calibration grid (fast mode on CI) through
+the real executor routes and fits the log-linear cost model; the artifact
+records the fitted coefficients and the on-grid predicted-vs-measured
+relative error per route — the honesty metric CI bounds.
+
+Stage 2 replays ``planner_bench``'s MIXED band (half the batch at ~0.1%
+selectivity, half at ~90%) on a fresh index three ways: the static
+threshold router (no model), the cost-model router on the wall-time
+metric, and the cost-model router on the ``n_dist`` metric (the paper's
+hardware-independent distance-computation cost, deterministic per route).
+CI asserts the DC-routed cost model spends no more mean distance
+computations than the static thresholds, and that every routing decision
+is the argmin of the router's own predictions.
+
+Usage: PYTHONPATH=src python -m benchmarks.cost_bench [--json PATH]
+                                                      [--registry DIR]
+Env:   REPRO_BENCH_FAST=1 -> small grid (CI smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _mixed_eval(index, q, filt, gt, b, k, ls, label):
+    from repro.core.recall import recall_at_k
+    from repro.cost.calibrate import time_route
+
+    res, dt = time_route(lambda: index.search_auto(q, filt, k=k, ls=ls),
+                         warmup=1, repeats=2)
+    _, p = index.search_auto(q, filt, k=k, ls=ls, return_plan=True)
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                      np.asarray(gt.ids)).mean()
+    out = {"routes": sorted(set(p.routes)),
+           "groups": [{"route": g.route, "n": int(g.ids.size)}
+                      for g in p.groups],
+           "mean_n_dist": round(float(np.asarray(res.n_dist).mean()), 1),
+           "recall": round(float(rec), 4),
+           "qps": round(b / dt, 1)}
+    # the acceptance invariant: every chosen route is the argmin of the
+    # router's own per-query cost predictions
+    router = index.executor.cost_router(k=k, ls=ls)
+    if router is not None:
+        out["argmin_consistent"] = all(
+            p.routes[i] == router.route(float(s))
+            for i, s in enumerate(p.selectivity))
+        out["predicted_costs_at_median"] = {
+            r: round(c, 2) for r, c in p.costs.items()}
+    print(f"mixed,{label},{out['mean_n_dist']},{out['recall']},"
+          f"{out['qps']},{'+'.join(out['routes'])}", flush=True)
+    return out
+
+
+def main(argv=None) -> dict:
+    from repro.core import JAGConfig, JAGIndex, range_filters, range_table
+    from repro.core.ground_truth import exact_filtered_knn
+    from repro.cost import CostRegistry, feature_names, fit, run_calibration
+    from repro.cost.calibrate import FAST_GRID, FULL_GRID, synth_dataset
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (CI artifact)")
+    ap.add_argument("--registry", default=None, metavar="DIR",
+                    help="also save the fitted model into this registry")
+    args = ap.parse_args(argv)
+
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    # the canonical grids — this benchmark IS the calibration CI runs, so
+    # it must measure exactly what calibrate(fast=...) would
+    grid = dict(FAST_GRID if fast else FULL_GRID)
+
+    t0 = time.time()
+    cal = run_calibration(**grid, verbose=True)
+    model = fit(cal.observations, cal.meta)
+    calib_s = time.time() - t0
+    print(f"# calibration: {len(cal.observations)} observations in "
+          f"{calib_s:.0f}s; fitted routes: {model.routes()}")
+    print("route,n_obs,median_rel_err,max_rel_err")
+    for route, st in model.fit_stats.items():
+        print(f"{route},{st['n_obs']},{st['median_rel_err']:.3f},"
+              f"{st['max_rel_err']:.3f}", flush=True)
+    if args.registry:
+        path = CostRegistry(args.registry).save(model)
+        print(f"# registry artifact: {path}")
+
+    # ---- mixed band: static thresholds vs cost-model routing --------------
+    n = 3000 if fast else 20000
+    d = 16 if fast else 64
+    b = 32 if fast else 128
+    k, ls = grid["k"], 64
+    lo_sel, hi_sel = 0.001, 0.9
+    # SAME synthetic recipe the calibration grid measured on
+    xb, vals, q = synth_dataset(n, d, b, seed=0)
+    cfg = JAGConfig(degree=16 if fast else 32, ls_build=32 if fast else 64,
+                    batch_size=256, cand_pool=64 if fast else 192,
+                    calib_samples=128)
+    index = JAGIndex.build(xb, range_table(vals), cfg)
+    his = np.where(np.arange(b) % 2 == 0, lo_sel, hi_sel).astype(np.float32)
+    filt = range_filters(np.zeros(b, np.float32), his)
+    gt = exact_filtered_knn(jnp.asarray(xb), range_table(vals),
+                            jnp.asarray(q), filt, k=k)
+
+    print("mixed,router,mean_n_dist,recall,qps,routes")
+    mixed = {}
+    mixed["static"] = _mixed_eval(index, q, filt, gt, b, k, ls, "static")
+    index.attach_cost_model(model, metric="us")
+    mixed["cost_us"] = _mixed_eval(index, q, filt, gt, b, k, ls, "cost_us")
+    index.attach_cost_model(model, metric="n_dist")
+    mixed["cost_n_dist"] = _mixed_eval(index, q, filt, gt, b, k, ls,
+                                       "cost_n_dist")
+
+    out = {"fast": fast, "calib_s": round(calib_s, 1),
+           "n_observations": len(cal.observations),
+           "meta": model.meta,
+           "feature_names": {r: list(feature_names(r))
+                             for r in model.routes()},
+           "coef": model.coef,
+           "fit_stats": model.fit_stats,
+           "mixed": {"target_sel": [lo_sel, hi_sel], "n": n, "d": d,
+                     "b": b, "k": k, "ls": ls, **mixed}}
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main()

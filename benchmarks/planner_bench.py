@@ -23,21 +23,16 @@ import os
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
+
+from repro.cost.calibrate import time_route   # shared warmup+median timer
 
 BANDS = (0.001, 0.01, 0.1, 0.5, 0.9)   # target selectivity per band
 ROUTE_NAMES = ("prefilter", "graph", "postfilter")
 
 
 def _timed(fn, repeats=3):
-    res = fn()
-    jax.block_until_ready(res.ids)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        res = fn()
-        jax.block_until_ready(res.ids)
-    return res, (time.perf_counter() - t0) / repeats
+    return time_route(fn, warmup=1, repeats=repeats)
 
 
 def main(argv=None) -> dict:

@@ -24,18 +24,13 @@ import os
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
+
+from repro.cost.calibrate import time_route   # shared warmup+median timer
 
 
 def _timed(fn, repeats=3):
-    res = fn()
-    jax.block_until_ready(res.ids)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        res = fn()
-        jax.block_until_ready(res.ids)
-    return res, (time.perf_counter() - t0) / repeats
+    return time_route(fn, warmup=1, repeats=repeats)
 
 
 def _recall(res, gt):

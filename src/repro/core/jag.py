@@ -121,6 +121,8 @@ class JAGIndex:
         self._executor = None                # serve.Executor, built lazily
         self._fused = {}                     # vec_dtype -> serve.FusedLayout
         self._q8 = None                      # (codes, scale, norms) cache
+        self.cost_model = None               # repro.cost.CostModel | None
+        self.cost_metric = "us"              # routing objective: us | n_dist
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -183,6 +185,25 @@ class JAGIndex:
             self._q8 = (xq, scale, xq_norm)
         return self._q8
 
+    def attach_cost_model(self, model, metric: str = "us") -> None:
+        """Attach (or detach, with None) a calibrated ``repro.cost``
+        CostModel: ``search_auto`` then routes on the argmin of predicted
+        per-route cost instead of the static thresholds, and :meth:`save`
+        persists the model inside the archive. Purely a routing-policy
+        change — each route's results are unchanged.
+
+        ``metric`` picks the routing objective: ``"us"`` (measured wall
+        time — the serving default) or ``"n_dist"`` (the paper's
+        hardware-independent distance-computation metric, deterministic
+        per route and therefore what benchmarks compare on).
+        """
+        from ..cost.model import METRICS
+        if metric not in METRICS:
+            raise ValueError(f"metric must be one of {METRICS}, "
+                             f"got {metric!r}")
+        self.cost_model = model
+        self.cost_metric = metric
+
     # -- query (Algorithm 2) ------------------------------------------------
     def search(self, queries, filt: FilterBatch, k: int = 10,
                ls: int = 64, max_iters: int = 0,
@@ -241,19 +262,33 @@ class JAGIndex:
         ``planner`` overrides the ``PlannerConfig`` thresholds;
         ``return_plan=True`` returns ``(result, plan)`` — a ``PerQueryPlan``
         reporting the per-group decisions, or a whole-batch ``Plan``.
+
+        When a calibrated cost model is attached
+        (:meth:`attach_cost_model`), routing decisions come from the
+        argmin of predicted per-route cost (``Executor.cost_router``)
+        instead of the thresholds; with no model the static behavior is
+        reproduced exactly. An explicit ``planner=`` override always wins
+        over the cost model — forced-route configs stay forced.
         """
         from ..serve.dispatch import dispatch_per_query, run_route
         from ..serve.planner import (PlannerConfig, plan as _plan,
                                      plan_per_query)
         cfg = planner or PlannerConfig()
         mi = max_iters or 2 * ls
+        # an explicit planner= override is an explicit routing instruction
+        # (e.g. prefilter_max_sel=1.1 forcing the exact scan everywhere) —
+        # an attached cost model must never shadow it
+        router = (None if planner is not None
+                  else self.executor.cost_router(k=k, ls=ls))
         if mode == "per_query":
-            p = plan_per_query(filt, self.attr, cfg, executor=self.executor)
+            p = plan_per_query(filt, self.attr, cfg, executor=self.executor,
+                               router=router)
             res = dispatch_per_query(self.executor, queries, filt, p, k=k,
                                      ls=ls, max_iters=mi, layout=layout,
                                      dtype=dtype)
         elif mode == "batch":
-            p = _plan(filt, self.attr, cfg, executor=self.executor)
+            p = _plan(filt, self.attr, cfg, executor=self.executor,
+                      router=router)
             res = run_route(self.executor, p.route, queries, filt, k=k,
                             ls=ls, max_iters=mi, layout=layout, dtype=dtype)
         else:
@@ -283,6 +318,11 @@ class JAGIndex:
             extra["q8__codes"] = np.asarray(xq)
             extra["q8__scale"] = np.asarray(scale)
             extra["q8__norms"] = np.asarray(xq_norm)
+        if self.cost_model is not None:
+            from ..cost.registry import to_json
+            extra["cost__model"] = np.frombuffer(
+                to_json(self.cost_model).encode(), np.uint8)
+            extra["cost__metric"] = self.cost_metric
         return dict(
             xb=np.asarray(self.xb), graph=np.asarray(self.graph),
             degree=np.asarray(self.degree), entry=np.asarray(self.entry),
@@ -325,6 +365,11 @@ class JAGIndex:
             idx._q8 = (jnp.asarray(z["q8__codes"]),
                        jnp.asarray(z["q8__scale"]),
                        jnp.asarray(z["q8__norms"]))
+        if "cost__model" in z:
+            from ..cost.registry import from_json
+            idx.cost_model = from_json(bytes(z["cost__model"]).decode())
+            if "cost__metric" in z:
+                idx.cost_metric = str(z["cost__metric"])
         return idx
 
     @classmethod

@@ -1,0 +1,40 @@
+"""Calibrated cost-model subsystem: measured per-route cost curves.
+
+The planner's static thresholds (``PlannerConfig.prefilter_max_sel`` /
+``postfilter_min_sel``) and the streaming layer's static ``compact_frac``
+are exactly the hand-picked cutoffs that drift as N, d, and hardware
+change. This package replaces them with *measured* per-route cost curves:
+
+  calibrate.py  micro-benchmark harness — measures us/query and distance
+                computations for every executor route (prefilter | graph |
+                postfilter | delta | merge) plus total compaction cost,
+                over a selectivity x N x d x k x ls grid, THROUGH the
+                epoch-aware ``serve.Executor`` so timings hit the real
+                compiled routes.
+  model.py      fitted analytic cost model — per-route log-linear terms
+                (prefilter ~ N*d, graph ~ ls*iters(sel)*d, postfilter ~
+                oversample*d, delta ~ delta_n*d), ``predict(route,
+                features) -> cost``, and the ``CostModelRouter`` that
+                argmin-routes queries when attached (static thresholds
+                remain the principled fallback when uncalibrated).
+  registry.py   schema-versioned JSON persistence, keyed by
+                backend/dtype/layout; models also ride inside ``JAGIndex``
+                archives (``cost__model`` key) so a loaded index routes
+                like the one that was saved.
+
+Integration: ``JAGIndex.attach_cost_model`` / ``Executor.cost_router``
+drive ``serve.planner.plan``/``plan_per_query``; ``StreamingJAGIndex``
+replaces the ``compact_frac`` trigger with a predicted delta-tax vs
+compaction-cost break-even. See ``benchmarks/cost_bench.py`` for the CI
+calibration smoke.
+"""
+from .calibrate import Calibration, run_calibration, calibrate, time_route
+from .model import (BASE_ROUTES, CostModel, CostModelRouter, Observation,
+                    feature_names, fit, phi)
+from .registry import (SCHEMA_VERSION, CostRegistry, from_json, model_key,
+                       to_json)
+
+__all__ = ["BASE_ROUTES", "Calibration", "CostModel", "CostModelRouter",
+           "CostRegistry", "Observation", "SCHEMA_VERSION", "calibrate",
+           "feature_names", "fit", "from_json", "model_key", "phi",
+           "run_calibration", "time_route", "to_json"]

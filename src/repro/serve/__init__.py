@@ -7,7 +7,10 @@ whole batches (``plan``) or individual queries (``plan_per_query``) to a
 strategy; dispatch.py gathers per-query route groups into contiguous
 sub-batches and scatters the results back into original order; executor.py
 owns the single jit cache behind every route (prefilter | graph |
-postfilter) and every public ``JAGIndex.search*`` entry point.
+postfilter) and every public ``JAGIndex.search*`` entry point. When a
+calibrated ``repro.cost`` model is attached to the index, the planner's
+static thresholds are replaced by ``Executor.cost_router``'s
+argmin-of-predicted-cost routing (see ``repro.cost``).
 """
 from .dispatch import dispatch_per_query, merge_topk, regroup, run_route
 from .engine import FusedEngine, make_fetch_fn

@@ -132,6 +132,30 @@ class Executor:
         return tuple(self._cache) if full else tuple(
             k[1:] for k in self._cache)
 
+    def cost_router(self, *, k: int, ls: int):
+        """The index's calibrated ``cost.CostModelRouter`` for this search
+        shape, or None (-> the planner's static thresholds).
+
+        Threads the attached cost model into routing: the router predicts
+        every base route's us/query at the live (n, d, k, ls) and folds
+        the constant delta-scan tax (``delta_n``/N rows the streaming
+        executor scans+merges on EVERY route) into each prediction. A
+        model that doesn't cover all three base routes is treated as
+        absent — partial calibrations never half-route.
+        """
+        model = getattr(self.index, "cost_model", None)
+        if model is None:
+            return None
+        from ..cost.model import BASE_ROUTES, CostModelRouter
+        metric = getattr(self.index, "cost_metric", "us")
+        if not model.covers(BASE_ROUTES, metric):
+            return None
+        idx = self.index
+        delta_n = idx.delta.n if hasattr(idx, "delta_arrays") else 0
+        return CostModelRouter(model, n=int(idx.xb.shape[0]),
+                               d=int(idx.xb.shape[1]), k=k, ls=ls,
+                               delta_n=delta_n, metric=metric)
+
     def engine(self, vec_dtype: str = "f32", **kw) -> FusedEngine:
         """FusedEngine over the index's packed layout (metadata + fetch)."""
         self._roll_epoch()

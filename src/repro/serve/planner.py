@@ -26,8 +26,13 @@ Two planning granularities share the probe:
     route, and scatters the results back into original query order.
 
 ``JAGIndex.search_auto`` is the end-to-end entry point (default
-``mode="per_query"``); thresholds live in ``PlannerConfig`` (static today —
-cost-model-driven thresholds remain a ROADMAP open item).
+``mode="per_query"``); the static thresholds live in ``PlannerConfig``.
+When the index carries a calibrated cost model (``repro.cost``,
+``JAGIndex.attach_cost_model``), both planners take a ``router``
+(``cost.CostModelRouter``, built per call by ``Executor.cost_router``)
+and the threshold ladder is replaced by an argmin over measured-cost
+predictions per route — the static thresholds remain the exact fallback
+whenever no model is attached or it doesn't cover the base routes.
 
 Streaming: both planners probe whatever attribute table they are handed —
 ``StreamingJAGIndex.search_auto`` passes the live base+delta table, so the
@@ -39,7 +44,7 @@ epoch and evicts them, so routing can never consult a stale-n sample.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -56,6 +61,26 @@ class PlannerConfig:
     postfilter_min_sel: float = 0.75
     seed: int = 0                  # sample draw (deterministic per planner)
 
+    def __post_init__(self):
+        # inverted thresholds would silently route the whole (0, 1] band
+        # to prefilter-or-postfilter with the graph band empty or
+        # ill-defined — refuse at construction, where the typo is.
+        # Values past 1.0 are legal on purpose: prefilter_max_sel=1.1
+        # (with postfilter_min_sel above it) forces the exact scan
+        # everywhere, which tests and ground-truth tooling rely on.
+        if self.n_samples < 1:
+            raise ValueError(f"n_samples must be >= 1, "
+                             f"got {self.n_samples}")
+        if self.prefilter_max_sel < 0.0:
+            raise ValueError(f"prefilter_max_sel must be >= 0, "
+                             f"got {self.prefilter_max_sel}")
+        if self.prefilter_max_sel >= self.postfilter_min_sel:
+            raise ValueError(
+                f"inverted thresholds: prefilter_max_sel "
+                f"{self.prefilter_max_sel} >= postfilter_min_sel "
+                f"{self.postfilter_min_sel} (the graph band would be "
+                f"empty and the ladder order-dependent)")
+
 
 class Plan(NamedTuple):
     """A whole-batch routing decision."""
@@ -63,6 +88,11 @@ class Plan(NamedTuple):
     selectivity: np.ndarray    # f32 [B] per-query estimates
     batch_selectivity: float   # the median driving the route choice
     n_sampled: int             # probe size actually used (== n for exact)
+    # predicted cost/query per route at the batch median when a cost-model
+    # router made the decision (in cost_metric units); None under the
+    # static thresholds
+    costs: Optional[Dict[str, float]] = None
+    cost_metric: Optional[str] = None    # "us" | "n_dist" | None (static)
 
 
 class GroupPlan(NamedTuple):
@@ -85,6 +115,11 @@ class PerQueryPlan(NamedTuple):
     selectivity: np.ndarray    # f32 [B] per-query estimates
     groups: Tuple[GroupPlan, ...]
     n_sampled: int
+    # predicted cost/query per route at the batch median when a cost-model
+    # router banded the queries (in cost_metric units); None under the
+    # static thresholds
+    costs: Optional[Dict[str, float]] = None
+    cost_metric: Optional[str] = None    # "us" | "n_dist" | None (static)
 
     @property
     def route(self) -> str:
@@ -122,12 +157,21 @@ def estimate_selectivity(filt: FilterBatch, table: AttrTable,
 
 
 def choose_route(sel: float, cfg: PlannerConfig) -> str:
-    """Threshold router over one selectivity scalar."""
+    """Threshold router over one selectivity scalar (the static fallback;
+    a calibrated ``cost.CostModelRouter`` replaces this ladder with an
+    argmin over predicted per-route cost)."""
     if sel <= cfg.prefilter_max_sel:
         return "prefilter"
     if sel >= cfg.postfilter_min_sel:
         return "postfilter"
     return "graph"
+
+
+def _route_of(sel: float, cfg: PlannerConfig, router) -> str:
+    """One query's route: cost-model argmin when a router is attached,
+    else the static threshold ladder."""
+    return router.route(sel) if router is not None else choose_route(sel,
+                                                                     cfg)
 
 
 def _estimate(filt: FilterBatch, table: AttrTable, cfg: PlannerConfig,
@@ -149,29 +193,38 @@ def _estimate(filt: FilterBatch, table: AttrTable, cfg: PlannerConfig,
 
 def plan(filt: FilterBatch, table: AttrTable,
          cfg: PlannerConfig = PlannerConfig(),
-         executor=None) -> Plan:
+         executor=None, router=None) -> Plan:
     """Estimate the batch's selectivity and pick ONE route for all queries.
 
     When ``executor`` is given, the probe's compilation lives in the
     executor's single jit cache (keyed like every route); otherwise the
-    estimate runs as a one-off traced call.
+    estimate runs as a one-off traced call. When ``router`` (a calibrated
+    ``cost.CostModelRouter``) is given, the route is the argmin of
+    predicted per-route cost at the batch median instead of the static
+    threshold ladder, and ``Plan.costs`` reports those predictions.
     """
     sel, n_sampled = _estimate(filt, table, cfg, executor)
     batch_sel = float(np.median(sel))
-    return Plan(choose_route(batch_sel, cfg), sel, batch_sel, n_sampled)
+    if router is None:
+        return Plan(_route_of(batch_sel, cfg, None), sel, batch_sel,
+                    n_sampled)
+    return Plan(router.route(batch_sel), sel, batch_sel, n_sampled,
+                router.costs(batch_sel), router.metric)
 
 
 def plan_per_query(filt: FilterBatch, table: AttrTable,
                    cfg: PlannerConfig = PlannerConfig(),
-                   executor=None) -> PerQueryPlan:
+                   executor=None, router=None) -> PerQueryPlan:
     """Band the per-query selectivity vector into route groups.
 
     Same probe as :func:`plan`; the [B] estimates are banded query-by-query
     and grouped by route (positions kept in ascending order so the
-    dispatcher's gather/scatter is a stable permutation).
+    dispatcher's gather/scatter is a stable permutation). With a ``router``
+    attached, each query's band is the argmin of its predicted per-route
+    cost instead of the static thresholds.
     """
     sel, n_sampled = _estimate(filt, table, cfg, executor)
-    routes = tuple(choose_route(float(s), cfg) for s in sel)
+    routes = tuple(_route_of(float(s), cfg, router) for s in sel)
     routes_arr = np.asarray(routes)
     groups = []
     for route in ROUTES:
@@ -179,15 +232,24 @@ def plan_per_query(filt: FilterBatch, table: AttrTable,
         if members.size:
             groups.append(GroupPlan(route, members.astype(np.int32),
                                     float(np.median(sel[members]))))
-    return PerQueryPlan(routes, sel, tuple(groups), n_sampled)
+    batch_sel = float(np.median(sel))
+    if router is None:
+        return PerQueryPlan(routes, sel, tuple(groups), n_sampled)
+    return PerQueryPlan(routes, sel, tuple(groups), n_sampled,
+                        router.costs(batch_sel), router.metric)
 
 
 def explain(p, cfg: PlannerConfig = PlannerConfig()) -> str:
     """One-line human-readable routing rationale (benchmarks / logs)."""
-    lo, hi = cfg.prefilter_max_sel, cfg.postfilter_min_sel
     head = f"route={p.route} sel~{p.batch_selectivity:.4f}"
     if isinstance(p, PerQueryPlan):
         split = " ".join(f"{g.route}:{g.ids.size}" for g in p.groups)
         head += f" [{split}]"
+    if p.costs is not None:
+        unit = {"us": "us", "n_dist": "DC"}.get(p.cost_metric,
+                                                p.cost_metric or "")
+        pred = " ".join(f"{r}={c:.1f}{unit}" for r, c in p.costs.items())
+        return f"{head} (n_sampled={p.n_sampled}, cost-model argmin: {pred})"
+    lo, hi = cfg.prefilter_max_sel, cfg.postfilter_min_sel
     return (f"{head} (n_sampled={p.n_sampled}, thresholds: "
             f"prefilter<={lo}, postfilter>={hi})")

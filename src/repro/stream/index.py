@@ -17,12 +17,18 @@ Every search merges the base result (any planner route over the graph
 segment) with the delta scan into one exact top-k per query
 (``serve.dispatch.merge_topk``) — with an exact base route the result is
 bit-identical to brute-force filtered k-NN over the concatenated database.
-When the delta grows past ``compact_frac * base_n``, :meth:`compact`
-re-runs the build's batch-insert primitive (core/build.py, Algorithm 3) to
-fold the delta rows into the graph, extends the fused f32 serving layout
-row-wise, resets the delta, and bumps the epoch. ``save``/``load`` persist
-the delta segment and epoch alongside the base archive, so a restarted
-server resumes mid-stream bit-for-bit.
+Compaction triggering is cost-driven when a calibrated ``repro.cost``
+model is attached (:meth:`attach_cost_model`, or loaded with the
+archive): the delta scan is a tax EVERY search pays, so the index
+compacts at the break-even point where the predicted tax over the next
+``query_horizon`` searches exceeds the predicted total compaction cost.
+With no model the static ``compact_frac * base_n`` row-count cutoff is
+the exact fallback. Either way :meth:`compact` re-runs the build's
+batch-insert primitive (core/build.py, Algorithm 3) to fold the delta
+rows into the graph, extends the fused f32 serving layout row-wise,
+resets the delta, and bumps the epoch. ``save``/``load`` persist the
+delta segment, epoch, and cost model alongside the base archive, so a
+restarted server resumes mid-stream bit-for-bit.
 """
 from __future__ import annotations
 
@@ -51,23 +57,31 @@ class StreamingJAGIndex:
 
     def __init__(self, base: JAGIndex, delta: Optional[DeltaSegment] = None,
                  *, epoch: int = 0, compact_frac: float = 0.25,
-                 n_compactions: int = 0):
+                 n_compactions: int = 0, query_horizon: int = 100_000):
         self.base = base
         self.delta = delta if delta is not None else DeltaSegment.for_table(
             base.attr, int(base.xb.shape[1]))
         self.epoch = int(epoch)
         self.compact_frac = float(compact_frac)
         self.n_compactions = int(n_compactions)
+        # cost-driven compaction: the model lives on the WRAPPER (compaction
+        # replaces .base with a fresh index, which would drop it), seeded
+        # from whatever the base archive carried
+        self.cost_model = base.cost_model
+        self.cost_metric = base.cost_metric
+        self.query_horizon = int(query_horizon)
+        self.delta_tax_us = 0.0      # predicted delta-scan us served so far
+        self._last_k = 10            # most recent served k (merge-tax term)
         self._executor = None
         self._merged: Optional[Tuple[int, AttrTable]] = None
 
     @classmethod
     def build(cls, xb, attr: AttrTable, cfg: JAGConfig = JAGConfig(), *,
-              compact_frac: float = 0.25,
+              compact_frac: float = 0.25, query_horizon: int = 100_000,
               verbose: bool = False) -> "StreamingJAGIndex":
         """Build the base graph, then serve it live."""
         return cls(JAGIndex.build(xb, attr, cfg, verbose=verbose),
-                   compact_frac=compact_frac)
+                   compact_frac=compact_frac, query_horizon=query_horizon)
 
     # -- executor-facing surface (graph segment + live attr table) ---------
     @property
@@ -137,23 +151,77 @@ class StreamingJAGIndex:
         xv, dattr = self.delta.device()
         return xv, dattr, int(self.base.xb.shape[0])
 
+    # -- cost-model plumbing (routing + compaction break-even) -------------
+    def attach_cost_model(self, model, metric: str = "us") -> None:
+        """Attach (or detach, with None) a calibrated ``repro.cost`` model:
+        ``search_auto`` routes on predicted-cost argmin (under ``metric``,
+        see ``JAGIndex.attach_cost_model``) and compaction fires on the
+        delta-tax break-even instead of ``compact_frac``. Sets the
+        WRAPPER's model (validation shared with the base method) — the
+        base index is untouched, so compaction can't drop it."""
+        JAGIndex.attach_cost_model(self, model, metric)
+
+    def compaction_break_even(self, k: Optional[int] = None
+                              ) -> Optional[Tuple[float, float, bool]]:
+        """(delta tax us/query, compaction total us, past break-even) under
+        the attached cost model, or None when uncalibrated.
+
+        The delta scan (+ merge) is a constant tax EVERY search pays; the
+        predicted tax over the next ``query_horizon`` searches against the
+        predicted one-off compaction cost is the row-count-free trigger —
+        a slow-compacting build tolerates a bigger delta, a hot query
+        stream compacts sooner, with no hand-tuned fraction anywhere.
+        ``k`` sizes the merge term of the tax; it defaults to the most
+        recently served k (searches record it), so the insert-time trigger
+        reasons about the traffic actually being served.
+        """
+        model = self.cost_model
+        if model is None or not model.covers(("delta", "compact")):
+            return None
+        if self.delta.n == 0:
+            return (0.0, 0.0, False)
+        from ..cost.model import delta_scan_tax
+        n, d = int(self.base.xb.shape[0]), int(self.base.xb.shape[1])
+        tax = delta_scan_tax(model, n=n, d=d,
+                             k=self._last_k if k is None else int(k),
+                             delta_n=self.delta.n)
+        cost = model.predict("compact",
+                             dict(delta_n=self.delta.n, n=n, d=d))
+        return (tax, cost, tax * self.query_horizon >= cost)
+
+    def _should_compact(self) -> bool:
+        """Cost break-even when calibrated; ``compact_frac`` fallback.
+
+        ``compact_frac <= 0`` is the explicit auto-compaction OFF switch
+        and wins over everything — a calibrated model must not start
+        firing multi-second compactions mid-bulk-load on an index whose
+        owner disabled them.
+        """
+        if self.compact_frac <= 0:
+            return False
+        be = self.compaction_break_even()
+        if be is not None:
+            return be[2]
+        return self.delta.n > self.compact_frac * self.base.xb.shape[0]
+
     # -- streaming writes --------------------------------------------------
     def insert(self, vectors, attrs: AttrTable, *,
                auto_compact: bool = True) -> dict:
         """Append a batch of (vectors, attr rows); bumps the epoch.
 
         Amortized O(batch): rows land in the delta segment's growable host
-        buffers; no graph work happens until compaction. When the delta
-        exceeds ``compact_frac`` of the base row count (and ``auto_compact``
-        is on), the batch triggers :meth:`compact` before returning.
-        Returns a report dict (n_added / n_total / epoch / compacted).
+        buffers; no graph work happens until compaction. With
+        ``auto_compact`` on, the batch triggers :meth:`compact` before
+        returning when the compaction policy says so — the cost-model
+        break-even when calibrated, the static ``compact_frac`` row-count
+        cutoff otherwise. Returns a report dict (n_added / n_total /
+        epoch / compacted).
         """
         n_added = np.asarray(vectors).shape[0]
         self.delta.append(vectors, attrs)
         self.epoch += 1
         compacted = False
-        if (auto_compact and self.compact_frac > 0
-                and self.delta.n > self.compact_frac * self.base.xb.shape[0]):
+        if auto_compact and self._should_compact():
             compacted = self.compact()
         return dict(n_added=int(n_added), n_total=self.n, epoch=self.epoch,
                     delta_rows=self.delta.n, compacted=compacted)
@@ -232,6 +300,10 @@ class StreamingJAGIndex:
                     filt: FilterBatch, k: int) -> SearchResult:
         if self.delta.n == 0:
             return base_res
+        self._last_k = int(k)
+        be = self.compaction_break_even(k)
+        if be is not None:          # telemetry: predicted tax actually paid
+            self.delta_tax_us += be[0] * int(np.shape(queries)[0])
         extra = self.executor.delta(queries, filt, k=k)
         return self.executor.merge(base_res, extra, k=k)
 
@@ -283,12 +355,25 @@ class StreamingJAGIndex:
         delta vectors/attr rows round-trip bit-for-bit.
         """
         arrs = self.base._save_arrays()
+        # the WRAPPER's cost-model state is authoritative either way: a
+        # post-compaction base carries none (keep the wrapper's), and a
+        # wrapper whose model was detached must not resurrect the base
+        # archive's on the next load
+        arrs.pop("cost__model", None)
+        arrs.pop("cost__metric", None)
+        if self.cost_model is not None:
+            from ..cost.registry import to_json
+            arrs["cost__model"] = np.frombuffer(
+                to_json(self.cost_model).encode(), np.uint8)
+            arrs["cost__metric"] = self.cost_metric
         xv, attrs = self.delta.rows()
         arrs["stream__epoch"] = np.asarray(self.epoch, np.int64)
         arrs["stream__n_compactions"] = np.asarray(self.n_compactions,
                                                    np.int64)
         arrs["stream__compact_frac"] = np.asarray(self.compact_frac,
                                                   np.float64)
+        arrs["stream__query_horizon"] = np.asarray(self.query_horizon,
+                                                   np.int64)
         arrs["stream__delta_xv"] = xv
         for k, v in attrs.items():
             arrs[f"stream__delta_attr__{k}"] = v
@@ -306,7 +391,9 @@ class StreamingJAGIndex:
         idx = cls(base,
                   epoch=int(z["stream__epoch"]),
                   compact_frac=float(z["stream__compact_frac"]),
-                  n_compactions=int(z["stream__n_compactions"]))
+                  n_compactions=int(z["stream__n_compactions"]),
+                  query_horizon=int(z["stream__query_horizon"])
+                  if "stream__query_horizon" in z else 100_000)
         xv = z["stream__delta_xv"]
         if xv.shape[0]:
             pre = "stream__delta_attr__"

@@ -1,0 +1,421 @@
+"""Calibrated cost-model subsystem: fit/predict, registry persistence,
+argmin routing through ``search_auto``, static-threshold fallback, and the
+streaming compaction break-even.
+
+The acceptance contract: with a calibrated model attached, every routing
+decision is the argmin of the router's own per-route cost predictions and
+each route's results are bit-identical to solo execution; with no model
+(or a partial one) the static-threshold behavior of ``serve.planner`` is
+reproduced exactly; ``StreamingJAGIndex`` compacts on the predicted
+delta-tax vs compaction-cost break-even instead of ``compact_frac``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import filters as F
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.cost import (BASE_ROUTES, CostModel, CostModelRouter,
+                        CostRegistry, Observation, calibrate, fit,
+                        from_json, model_key, phi, time_route, to_json)
+from repro.cost.model import delta_scan_tax
+from repro.stream import StreamingJAGIndex
+
+N, D, B = 600, 8, 12
+CFG = JAGConfig(degree=16, ls_build=32, batch_size=128, cand_pool=64,
+                calib_samples=64, n_seeds=8)
+
+
+# ---------------------------------------------------------------------------
+# model: fit/predict round-trip, coverage semantics, router argmin
+# ---------------------------------------------------------------------------
+
+W_TRUE = {"prefilter": [2.0, 0.5, 0.1], "graph": [1.0, 0.8, -0.3, 0.2],
+          "postfilter": [1.5, 0.7, 0.1, 0.05], "delta": [0.5, 0.9],
+          "merge": [0.2, 0.3], "compact": [3.0, 1.0]}
+
+
+def _synthetic_obs(n_per_route=24, seed=0):
+    """Noise-free observations drawn exactly from W_TRUE's log-linear law."""
+    rng = np.random.default_rng(seed)
+    obs = []
+    for route, w in W_TRUE.items():
+        for _ in range(n_per_route):
+            f = dict(sel=float(rng.uniform(0.001, 1.0)),
+                     n=int(rng.integers(500, 50000)),
+                     d=int(rng.integers(8, 128)),
+                     ls=int(rng.choice([32, 64, 128])), k=10,
+                     delta_n=int(rng.integers(10, 1000)))
+            us = float(np.exp(phi(route, f) @ np.asarray(w)))
+            obs.append(Observation(route, f, us=us, n_dist=2.0 * us))
+    return obs
+
+
+def test_fit_recovers_exact_log_linear_data():
+    model = fit(_synthetic_obs(), dict(backend="cpu"))
+    assert set(model.routes()) == set(W_TRUE)
+    f = dict(sel=0.05, n=5000, d=32, ls=64, k=10, delta_n=100)
+    for route, w in W_TRUE.items():
+        want = float(np.exp(phi(route, f) @ np.asarray(w)))
+        assert math.isclose(model.predict(route, f), want, rel_tol=1e-6)
+        # the n_dist metric was generated at exactly 2x the us law
+        assert math.isclose(model.predict(route, f, "n_dist"), 2 * want,
+                            rel_tol=1e-6)
+        assert model.fit_stats[route]["median_rel_err"] < 1e-9
+
+
+def test_fit_skips_underdetermined_routes():
+    """Fewer observations than coefficients -> the route stays uncovered
+    (the planner then falls back to static thresholds), never a garbage
+    fit."""
+    obs = _synthetic_obs(n_per_route=24)
+    f = dict(sel=0.5, n=1000, d=16, ls=64, k=10, delta_n=50)
+    us = float(np.exp(phi("graph", f) @ np.asarray(W_TRUE["graph"])))
+    partial = [ob for ob in obs if ob.route != "graph"]
+    partial.append(Observation("graph", f, us=us, n_dist=1.0))
+    model = fit(partial)
+    assert not model.covers(("graph",))
+    assert not model.covers(BASE_ROUTES)
+    assert model.covers(("prefilter", "postfilter"))
+
+
+def test_predictions_always_positive():
+    model = fit(_synthetic_obs())
+    for route in model.routes():
+        for sel in (0.0, 1e-9, 0.5, 1.0, 5.0):
+            c = model.predict(route, dict(sel=sel, n=10, d=4, ls=8, k=2,
+                                          delta_n=0))
+            assert c > 0.0, (route, sel, c)
+
+
+def test_router_picks_argmin_and_folds_delta_tax():
+    model = fit(_synthetic_obs(), dict(backend="cpu"))
+    r0 = CostModelRouter(model, n=5000, d=32, k=10, ls=64, delta_n=0)
+    r1 = CostModelRouter(model, n=5000, d=32, k=10, ls=64, delta_n=400)
+    assert r0.delta_tax == 0.0
+    want_tax = delta_scan_tax(model, n=5000, d=32, k=10, delta_n=400)
+    assert r1.delta_tax == want_tax > 0.0
+    for sel in (0.001, 0.02, 0.3, 0.9):
+        costs = r0.costs(sel)
+        assert r0.route(sel) == min(BASE_ROUTES, key=costs.__getitem__)
+        # the tax is constant across routes: argmin must not change
+        assert r1.route(sel) == r0.route(sel)
+        for route in BASE_ROUTES:
+            assert math.isclose(r1.costs(sel)[route], costs[route] + want_tax,
+                                rel_tol=1e-9)
+
+
+def test_router_requires_coverage():
+    model = fit([ob for ob in _synthetic_obs() if ob.route == "prefilter"])
+    with pytest.raises(ValueError, match="static"):
+        CostModelRouter(model, n=100, d=8, k=10, ls=32)
+
+
+def test_time_route_median_and_warmup():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return np.zeros(3)
+
+    res, dt = time_route(fn, warmup=2, repeats=5)
+    assert len(calls) == 7 and res.shape == (3,) and dt >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# registry + archive persistence
+# ---------------------------------------------------------------------------
+
+def test_json_round_trip_and_schema_guard():
+    model = fit(_synthetic_obs(),
+                dict(backend="cpu", dtype="f32", layout="default"))
+    m2 = from_json(to_json(model))
+    assert m2.coef == model.coef and m2.meta == model.meta
+    f = dict(sel=0.1, n=2000, d=16, ls=32, k=10, delta_n=20)
+    assert m2.predict("graph", f) == model.predict("graph", f)
+    bad = to_json(model).replace('"schema": 1', '"schema": 99')
+    with pytest.raises(ValueError, match="schema"):
+        from_json(bad)
+
+
+def test_registry_keys_and_round_trip(tmp_path):
+    reg = CostRegistry(str(tmp_path / "reg"))
+    assert reg.keys() == () and reg.load("cpu") is None
+    model = fit(_synthetic_obs(),
+                dict(backend="cpu", dtype="f32", layout="default"))
+    path = reg.save(model)
+    assert path.endswith("cost-cpu-f32-default.json")
+    assert reg.keys() == (model_key("cpu"),)
+    got = reg.load("cpu")
+    assert got is not None and got.coef == model.coef
+    assert reg.load("tpu") is None
+
+
+# ---------------------------------------------------------------------------
+# serving integration: built index + model, argmin routing, bit-identity,
+# exact static fallback when uncalibrated
+# ---------------------------------------------------------------------------
+
+_STATE = {}
+
+
+def _index():
+    """One built index + a measured calibration model, shared per session.
+
+    The calibration runs the REAL harness (tiny grid, repeats=1) on the
+    index's own (n, d), so the attached model is a genuine measured
+    artifact, not hand-picked coefficients.
+    """
+    if "idx" not in _STATE:
+        rng = np.random.default_rng(7)
+        xb = rng.normal(size=(N, D)).astype(np.float32)
+        vals = rng.uniform(0, 1, N).astype(np.float32)
+        idx = JAGIndex.build(xb, F.range_table(vals), CFG)
+        q = (xb[rng.integers(0, N, B)]
+             + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+        model = calibrate(fast=True, ns=(N,), ds=(D,), cfg=CFG,
+                          sels=(0.005, 0.1, 0.9), lss=(24, 48), b=B,
+                          delta_ns=(30, 90), repeats=1, warmup=1)
+        _STATE["idx"] = (idx, q, vals, model)
+    return _STATE["idx"]
+
+
+def _mixed_filter(rng):
+    his = np.where(np.arange(B) % 2 == 0, 0.005, 0.9).astype(np.float32)
+    return F.range_filters(np.zeros(B, np.float32), his)
+
+
+def test_calibration_covers_all_routes_and_reports_fit():
+    _, _, _, model = _index()
+    assert model.covers(BASE_ROUTES)
+    assert model.covers(("delta", "merge", "compact"))
+    assert model.meta["backend"] and model.meta["dtype"] == "f32"
+    for route, st in model.fit_stats.items():
+        assert st["n_obs"] >= 2 and st["median_rel_err"] >= 0.0
+
+
+@pytest.mark.parametrize("metric", ["us", "n_dist"])
+def test_search_auto_routes_by_predicted_cost_argmin(metric):
+    idx, q, _, model = _index()
+    filt = _mixed_filter(np.random.default_rng(0))
+    try:
+        idx.attach_cost_model(model, metric=metric)
+        res, p = idx.search_auto(q, filt, k=10, ls=48, return_plan=True)
+        assert p.costs is not None and set(p.costs) == set(BASE_ROUTES)
+        router = idx.executor.cost_router(k=10, ls=48)
+        assert router is not None and router.metric == metric
+        for i, s in enumerate(p.selectivity):
+            costs = router.costs(float(s))
+            assert p.routes[i] == min(BASE_ROUTES, key=costs.__getitem__), (
+                i, float(s), costs, p.routes[i])
+        assert res.ids.shape == (B, 10)
+    finally:
+        idx.attach_cost_model(None)
+
+
+def test_cost_routed_results_bit_identical_to_solo_execution():
+    from repro.serve.dispatch import run_route
+    idx, q, _, model = _index()
+    filt = _mixed_filter(np.random.default_rng(1))
+    try:
+        idx.attach_cost_model(model)
+        res, p = idx.search_auto(q, filt, k=10, ls=48, return_plan=True)
+        for i in range(B):
+            solo = run_route(idx.executor, p.routes[i], q[i:i + 1],
+                             filt.take(np.asarray([i], np.int32)), k=10,
+                             ls=48, max_iters=96)
+            for field in ("ids", "primary", "secondary", "n_dist"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(res, field))[i],
+                    np.asarray(getattr(solo, field))[0],
+                    err_msg=(field, i, p.routes[i]))
+    finally:
+        idx.attach_cost_model(None)
+
+
+def test_uncalibrated_index_reproduces_static_thresholds_exactly():
+    """No model (or a partial one) -> routing, plans, and results are the
+    static planner's, bit for bit."""
+    from repro.serve.planner import PlannerConfig, choose_route
+    idx, q, _, model = _index()
+    filt = _mixed_filter(np.random.default_rng(2))
+    assert idx.executor.cost_router(k=10, ls=48) is None
+    want, wp = idx.search_auto(q, filt, k=10, ls=48, return_plan=True)
+    assert wp.costs is None
+    cfg = PlannerConfig()
+    assert wp.routes == tuple(choose_route(float(s), cfg)
+                              for s in wp.selectivity)
+    # a partial model (missing base routes) must behave as if absent
+    partial = fit([ob for ob in _synthetic_obs()
+                   if ob.route in ("prefilter", "delta")])
+    try:
+        idx.attach_cost_model(partial)
+        assert idx.executor.cost_router(k=10, ls=48) is None
+        got, gp = idx.search_auto(q, filt, k=10, ls=48, return_plan=True)
+        assert gp.routes == wp.routes and gp.costs is None
+        for field in want._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                          np.asarray(getattr(want, field)),
+                                          err_msg=field)
+    finally:
+        idx.attach_cost_model(None)
+
+
+def test_explicit_planner_override_wins_over_attached_model():
+    """``planner=`` is an explicit routing instruction (e.g. the
+    EXACT_PLANNER idiom forcing the prefilter scan everywhere) — an
+    attached cost model must never shadow it."""
+    from repro.serve.planner import PlannerConfig
+    idx, q, _, model = _index()
+    filt = _mixed_filter(np.random.default_rng(9))
+    force = PlannerConfig(prefilter_max_sel=1.1, postfilter_min_sel=1.2)
+    try:
+        idx.attach_cost_model(model)
+        res, p = idx.search_auto(q, filt, k=10, ls=48, planner=force,
+                                 return_plan=True)
+        assert p.routes == ("prefilter",) * B and p.costs is None
+        # and the scan really ran: primary is 0/INF, never a graph key
+        assert (np.asarray(res.primary)[np.asarray(res.ids) >= 0] == 0).all()
+    finally:
+        idx.attach_cost_model(None)
+
+
+def test_cost_model_rides_in_index_archive(tmp_path):
+    idx, q, _, model = _index()
+    path = str(tmp_path / "with_model.npz")
+    try:
+        idx.attach_cost_model(model, metric="n_dist")
+        idx.save(path)
+    finally:
+        idx.attach_cost_model(None)
+    idx2 = JAGIndex.load(path)
+    assert idx2.cost_model is not None and idx2.cost_metric == "n_dist"
+    assert idx2.cost_model.coef == model.coef
+    assert idx2.executor.cost_router(k=10, ls=48) is not None
+    # and a model-free save stays model-free
+    path2 = str(tmp_path / "without_model.npz")
+    idx.save(path2)
+    assert JAGIndex.load(path2).cost_model is None
+
+
+# ---------------------------------------------------------------------------
+# streaming: compaction break-even replaces compact_frac when calibrated
+# ---------------------------------------------------------------------------
+
+def _flat_model(delta_us: float, compact_us: float) -> CostModel:
+    """A model with constant delta/compact predictions (zero slope), so
+    break-even arithmetic is exact in tests."""
+    return CostModel(coef={"delta": {"us": [math.log(delta_us), 0.0]},
+                           "compact": {"us": [math.log(compact_us), 0.0]}},
+                     meta={"backend": "test"})
+
+
+def test_break_even_compacts_long_before_compact_frac():
+    """Cheap compaction + hot query stream -> compact at a delta far below
+    the static fraction (the static trigger would have waited)."""
+    idx, _, _, _ = _index()
+    rng = np.random.default_rng(3)
+    s = StreamingJAGIndex(idx, compact_frac=0.9, query_horizon=1000)
+    s.attach_cost_model(_flat_model(delta_us=50.0, compact_us=1000.0))
+    xv = rng.normal(size=(10, D)).astype(np.float32)
+    rep = s.insert(xv, F.range_table(rng.uniform(0, 1, 10).astype(
+        np.float32)))
+    # tax*horizon = 50us * 1000 = 50_000us >= 1000us -> compacted, even
+    # though 10 rows is nowhere near 0.9 * N
+    assert rep["compacted"] and s.delta.n == 0 and s.n_compactions == 1
+
+
+def test_break_even_defers_when_compaction_is_expensive():
+    """Expensive compaction -> the delta rides past compact_frac without
+    compacting (the static trigger would have fired)."""
+    idx, _, _, _ = _index()
+    rng = np.random.default_rng(4)
+    s = StreamingJAGIndex(idx, compact_frac=0.05, query_horizon=10)
+    s.attach_cost_model(_flat_model(delta_us=1.0, compact_us=1e9))
+    m = int(0.2 * N)
+    xv = rng.normal(size=(m, D)).astype(np.float32)
+    rep = s.insert(xv, F.range_table(rng.uniform(0, 1, m).astype(
+        np.float32)))
+    assert not rep["compacted"] and s.delta.n == m
+    tax, cost, fire = s.compaction_break_even()
+    assert math.isclose(tax, 1.0, rel_tol=1e-9)
+    assert math.isclose(cost, 1e9, rel_tol=1e-9) and not fire
+
+
+def test_break_even_none_when_uncalibrated_falls_back_to_frac():
+    idx, _, _, _ = _index()
+    rng = np.random.default_rng(5)
+    s = StreamingJAGIndex(idx, compact_frac=0.05)
+    assert s.compaction_break_even() is None
+    m = int(0.1 * N)
+    rep = s.insert(rng.normal(size=(m, D)).astype(np.float32),
+                   F.range_table(rng.uniform(0, 1, m).astype(np.float32)))
+    assert rep["compacted"]           # static fraction fired, as before
+
+
+def test_delta_tax_telemetry_accumulates():
+    idx, q, _, _ = _index()
+    rng = np.random.default_rng(6)
+    s = StreamingJAGIndex(idx, compact_frac=0.0, query_horizon=10)
+    s.attach_cost_model(_flat_model(delta_us=7.0, compact_us=1e9))
+    s.insert(rng.normal(size=(20, D)).astype(np.float32),
+             F.range_table(rng.uniform(0, 1, 20).astype(np.float32)),
+             auto_compact=False)
+    filt = F.range_filters(np.zeros(B, np.float32),
+                           np.full(B, 0.5, np.float32))
+    assert s.delta_tax_us == 0.0
+    s.search_auto(q, filt, k=5, ls=24)
+    assert math.isclose(s.delta_tax_us, 7.0 * B, rel_tol=1e-9)
+    s.search_auto(q, filt, k=5, ls=24)
+    assert math.isclose(s.delta_tax_us, 2 * 7.0 * B, rel_tol=1e-9)
+
+
+def test_compact_frac_zero_disables_auto_compaction_even_calibrated():
+    """compact_frac<=0 is the explicit OFF switch — a calibrated
+    break-even that says 'compact now' must not override it (bulk loads
+    rely on it)."""
+    idx, _, _, _ = _index()
+    rng = np.random.default_rng(10)
+    s = StreamingJAGIndex(idx, compact_frac=0.0, query_horizon=10**9)
+    s.attach_cost_model(_flat_model(delta_us=50.0, compact_us=1.0))
+    rep = s.insert(rng.normal(size=(10, D)).astype(np.float32),
+                   F.range_table(rng.uniform(0, 1, 10).astype(np.float32)))
+    tax, cost, fire = s.compaction_break_even()
+    assert fire                              # break-even WOULD fire...
+    assert not rep["compacted"] and s.delta.n == 10   # ...but OFF wins
+
+
+def test_detached_model_stays_detached_across_save_load(tmp_path):
+    """attach(None) on a wrapper loaded from a model-carrying archive must
+    not resurrect the base archive's model on the next save/load."""
+    idx, _, _, model = _index()
+    rng = np.random.default_rng(11)
+    s = StreamingJAGIndex(idx, compact_frac=0.5)
+    s.attach_cost_model(model)
+    p1 = str(tmp_path / "with.npz")
+    s.save(p1)
+    s2 = StreamingJAGIndex.load(p1)
+    assert s2.cost_model is not None         # archive carried it
+    s2.attach_cost_model(None)
+    p2 = str(tmp_path / "detached.npz")
+    s2.save(p2)
+    s3 = StreamingJAGIndex.load(p2)
+    assert s3.cost_model is None and s3.compaction_break_even() is None
+
+
+def test_streaming_archive_round_trips_model_and_horizon(tmp_path):
+    idx, _, _, model = _index()
+    rng = np.random.default_rng(8)
+    s = StreamingJAGIndex(idx, compact_frac=0.5, query_horizon=777)
+    s.attach_cost_model(model, metric="n_dist")
+    s.insert(rng.normal(size=(15, D)).astype(np.float32),
+             F.range_table(rng.uniform(0, 1, 15).astype(np.float32)),
+             auto_compact=False)
+    path = str(tmp_path / "stream_model.npz")
+    s.save(path)
+    s2 = StreamingJAGIndex.load(path)
+    assert s2.query_horizon == 777 and s2.cost_metric == "n_dist"
+    assert s2.cost_model is not None
+    assert s2.cost_model.coef == model.coef
+    assert s2.compaction_break_even() is not None

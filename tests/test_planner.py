@@ -146,6 +146,37 @@ def test_choose_route_thresholds():
     assert choose_route(1.0, cfg) == "postfilter"
 
 
+def test_choose_route_boundaries_are_inclusive():
+    """Exactly AT a threshold the extreme route wins (<=, >=) — the band
+    edges must not fall through to graph."""
+    from repro.serve.planner import choose_route
+    lo, hi = 0.1, 0.6
+    cfg = PlannerConfig(prefilter_max_sel=lo, postfilter_min_sel=hi)
+    assert choose_route(lo, cfg) == "prefilter"
+    assert choose_route(np.nextafter(lo, 1.0), cfg) == "graph"
+    assert choose_route(np.nextafter(hi, 0.0), cfg) == "graph"
+    assert choose_route(hi, cfg) == "postfilter"
+
+
+def test_planner_config_rejects_inverted_thresholds():
+    """prefilter_max_sel >= postfilter_min_sel used to be accepted
+    silently (the graph band empty, the ladder order-dependent) — it must
+    refuse at construction."""
+    with pytest.raises(ValueError, match="inverted"):
+        PlannerConfig(prefilter_max_sel=0.8, postfilter_min_sel=0.75)
+    with pytest.raises(ValueError, match="inverted"):
+        PlannerConfig(prefilter_max_sel=0.75, postfilter_min_sel=0.75)
+    with pytest.raises(ValueError, match="n_samples"):
+        PlannerConfig(n_samples=0)
+    with pytest.raises(ValueError, match="prefilter_max_sel"):
+        PlannerConfig(prefilter_max_sel=-0.01)
+    # still legal on purpose: >1 thresholds force one route everywhere
+    # (tests/ground-truth tooling route everything to the exact scan)
+    cfg = PlannerConfig(prefilter_max_sel=1.1, postfilter_min_sel=1.2)
+    from repro.serve.planner import choose_route
+    assert choose_route(1.0, cfg) == "prefilter"
+
+
 def test_plan_without_executor_matches_with_executor():
     _, tab, idx, _, filters = _setup(F.RANGE)
     filt = filters["mid"]

@@ -25,7 +25,8 @@ CFG = JAGConfig(degree=16, ls_build=32, batch_size=128, cand_pool=64,
                 calib_samples=64, n_seeds=8)
 # routes every query to the (exact) prefilter scan -> merged result must be
 # bit-equal to brute force over the concatenated database at ANY selectivity
-EXACT_PLANNER = PlannerConfig(prefilter_max_sel=1.1)
+# (postfilter_min_sel lifted past it: thresholds must stay ordered)
+EXACT_PLANNER = PlannerConfig(prefilter_max_sel=1.1, postfilter_min_sel=1.2)
 _SEEDS = {F.LABEL: 101, F.RANGE: 202, F.SUBSET: 303, F.BOOLEAN: 404}
 
 
@@ -220,6 +221,38 @@ def test_delta_route_requires_streaming_index():
     filt = _filters(F.RANGE, np.random.default_rng(0), 0.4)
     with pytest.raises(TypeError, match="frozen"):
         idx.base.executor.delta(q, filt, k=5)
+
+
+@pytest.mark.parametrize("layout", ["default", "fused"])
+def test_int8_serving_across_compaction_matches_fresh_rebuild(layout):
+    """``compact`` extends only the fused f32 layout and claims int8 state
+    "is rebuilt lazily on next use" — pin that claim: post-compaction int8
+    results (both the split-quantized default path and the packed int8
+    fused layout) must be bit-identical to a from-scratch index over the
+    SAME post-compaction arrays. The int8 state is deliberately warmed
+    BEFORE compaction so any stale scale/codes/layout surviving the fold
+    would be caught."""
+    idx, q = _setup(F.RANGE)
+    rng = np.random.default_rng(89)
+    filt = _filters(F.RANGE, rng, 0.5)
+    idx.insert(*_rows(F.RANGE, rng, M), auto_compact=False)
+    # warm the pre-compaction int8 state (global quant scale, packed rows)
+    idx.search_int8(q, filt, k=10, ls=64, layout=layout)
+    assert idx.compact()
+    b = idx.base
+    fresh = JAGIndex(b.xb, b.attr, b.graph, b.degree, b.entry, b.cfg,
+                     b.build_cfg)
+    got = idx.search_int8(q, filt, k=10, ls=64, layout=layout)
+    want = fresh.search_int8(q, filt, k=10, ls=64, layout=layout)
+    for field in got._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(want, field)),
+                                      err_msg=(layout, field))
+    # the lazily rebuilt quantization really covers the folded rows
+    if layout == "default":
+        assert int(idx.base.quantized()[0].shape[0]) == idx.n
+    else:
+        assert int(idx.base.fused_layout("int8").packed.shape[0]) == idx.n
 
 
 def test_int8_streaming_search_returns_delta_hits():
