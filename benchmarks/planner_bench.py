@@ -12,6 +12,14 @@ the router does not collapse every band onto one path AND that the
 per-query router splits the mixed batch and wins on mean distance
 computations (see .github/workflows/ci.yml).
 
+A compound-filter section then repeats the exercise with expression trees
+over a second, composite label+range index: a rare-label AND wide-range
+conjunction, a two-label OR, a mixed per-lane OR band (per-query routing vs
+every whole-batch route), and a fixed-vs-reordered AND measuring the clause
+reorderer's short-circuit filter-eval savings (``GroundTruth.n_feval``).
+``--compound-json`` writes that section as its own CI artifact
+(BENCH_compound.json) with its own asserts in ci.yml.
+
 Usage: PYTHONPATH=src python -m benchmarks.planner_bench [--json PATH]
 Env:   REPRO_BENCH_FAST=1 -> small scale (CI smoke).
 """
@@ -45,6 +53,9 @@ def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results as JSON (CI artifact)")
+    ap.add_argument("--compound-json", default=None, metavar="PATH",
+                    help="write the compound-filter section as its own "
+                         "JSON artifact")
     ap.add_argument("--n", type=int, default=None, help="database size")
     ap.add_argument("--b", type=int, default=None, help="query batch size")
     args = ap.parse_args(argv)
@@ -147,15 +158,146 @@ def main(argv=None) -> dict:
              "explain": explain(pq, pcfg),
              "paths": paths}
 
+    # ---- compound expression trees over a composite label+range index ----
+    from repro.core.filters import (Label, Range, describe, joint_table,
+                                    label_table)
+    from repro.serve.planner import leaf_selectivities, reorder_clauses
+
+    n2 = 2000 if fast else 10000
+    xb2 = rng.normal(size=(n2, d)).astype(np.float32)
+    labels = rng.integers(0, 4, n2).astype(np.int32)
+    # rare label at ~1%: OR-composed with a tight range it stays under the
+    # 0.02 prefilter cutoff, so the mixed band's rare lanes route to the
+    # exact scan (the per-query win the CI assert checks)
+    labels[: max(4, n2 // 100)] = 9
+    rng.shuffle(labels)
+    vals2 = rng.uniform(0, 1, n2).astype(np.float32)
+    attr2 = joint_table(label_table(labels), range_table(vals2))
+    t0 = time.time()
+    index2 = JAGIndex.build(xb2, attr2, cfg)
+    build2_s = time.time() - t0
+    q2 = (xb2[rng.integers(0, n2, b)]
+          + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
+    ex2 = index2.executor
+    zeros = np.zeros(b, np.float32)
+
+    def _measure(runs, gt):
+        paths = {}
+        for name, fn in runs.items():
+            res, dt = _timed(fn)
+            rec = recall_at_k(np.asarray(res.ids),
+                              np.asarray(res.primary) == 0,
+                              np.asarray(gt.ids)).mean()
+            paths[name] = {"qps": round(b / dt, 1),
+                           "recall": round(float(rec), 4),
+                           "mean_n_dist": round(
+                               float(np.asarray(res.n_dist).mean()), 1)}
+        return paths
+
+    compound_bands = []
+    cases = (
+        ("rare_and_wide",
+         Label(np.full(b, 9)) & Range(zeros, np.full(b, 0.9, np.float32))),
+        ("two_label_or",
+         Label(np.full(b, 1)) | Label(np.full(b, 2))),
+    )
+    for name, expr in cases:
+        gt = exact_filtered_knn(jnp.asarray(xb2), attr2, jnp.asarray(q2),
+                                expr, k=k)
+        p = plan(expr, attr2, pcfg, executor=ex2)
+        paths = _measure({
+            "prefilter": lambda: ex2.prefilter(q2, expr, k=k),
+            "graph": lambda: ex2.graph(q2, expr, k=k, ls=ls,
+                                       max_iters=2 * ls),
+            "postfilter": lambda: ex2.postfilter(q2, expr, k=k, ls=ls,
+                                                 max_iters=2 * ls),
+            "auto": lambda: index2.search_auto(q2, expr, k=k, ls=ls),
+        }, gt)
+        for pth, v in paths.items():
+            print(f"compound:{name},{p.route},{pth},{v['qps']},"
+                  f"{v['recall']},{v['mean_n_dist']}", flush=True)
+        compound_bands.append({
+            "case": name, "expr": describe(expr),
+            "est_sel": round(p.batch_selectivity, 5), "route": p.route,
+            "explain": explain(p, pcfg, filt=expr), "paths": paths,
+            "mean_n_feval": round(float(np.asarray(gt.n_feval).mean()), 1)})
+
+    # mixed per-lane OR band: even lanes rare (tight range OR rare label),
+    # odd lanes wide -> the per-query router must split and win on DCs
+    his = np.where(np.arange(b) % 2 == 0, lo_sel, hi_sel).astype(np.float32)
+    labs = np.where(np.arange(b) % 2 == 0, 9, 2).astype(np.int32)
+    cexpr = Range(zeros, his) | Label(labs)
+    gt = exact_filtered_knn(jnp.asarray(xb2), attr2, jnp.asarray(q2),
+                            cexpr, k=k)
+    cpq = plan_per_query(cexpr, attr2, pcfg, executor=ex2)
+    cpaths = _measure({
+        "prefilter": lambda: ex2.prefilter(q2, cexpr, k=k),
+        "graph": lambda: ex2.graph(q2, cexpr, k=k, ls=ls, max_iters=2 * ls),
+        "postfilter": lambda: ex2.postfilter(q2, cexpr, k=k, ls=ls,
+                                             max_iters=2 * ls),
+        "batch": lambda: index2.search_auto(q2, cexpr, k=k, ls=ls,
+                                            mode="batch"),
+        "per_query": lambda: index2.search_auto(q2, cexpr, k=k, ls=ls,
+                                                mode="per_query"),
+    }, gt)
+    for pth, v in cpaths.items():
+        print(f"compound:mixed,{cpq.route},{pth},{v['qps']},{v['recall']},"
+              f"{v['mean_n_dist']}", flush=True)
+    cmixed = {"expr": describe(cexpr),
+              "routes": [g.route for g in cpq.groups],
+              "groups": [{"route": g.route, "n": int(g.ids.size),
+                          "median_sel": round(g.selectivity, 5)}
+                         for g in cpq.groups],
+              "explain": explain(cpq, pcfg, filt=cexpr),
+              "paths": cpaths}
+
+    # clause reordering: deliberately-worst AND order vs the planner's
+    # reordered tree — results identical, short-circuit evals drop
+    wide = Range(zeros, np.full(b, 0.9, np.float32))
+    rare = Label(np.full(b, 9))
+    fixed = wide & rare
+    sels = np.median(np.asarray(leaf_selectivities(
+        fixed, attr2, jnp.arange(n2))), axis=1)
+    better = reorder_clauses(fixed, sels)
+    gt_fixed = exact_filtered_knn(jnp.asarray(xb2), attr2, jnp.asarray(q2),
+                                  fixed, k=k)
+    gt_best = exact_filtered_knn(jnp.asarray(xb2), attr2, jnp.asarray(q2),
+                                 better, k=k)
+    reorder = {
+        "expr_fixed": describe(fixed),
+        "expr_reordered": describe(better),
+        "leaf_sels": [round(float(s), 5) for s in sels],
+        "mean_n_feval_fixed": round(
+            float(np.asarray(gt_fixed.n_feval).mean()), 1),
+        "mean_n_feval_reordered": round(
+            float(np.asarray(gt_best.n_feval).mean()), 1),
+        "ids_identical": bool(np.array_equal(np.asarray(gt_fixed.ids),
+                                             np.asarray(gt_best.ids))),
+    }
+    print(f"compound:reorder,{reorder['expr_fixed']} -> "
+          f"{reorder['expr_reordered']}, n_feval "
+          f"{reorder['mean_n_feval_fixed']} -> "
+          f"{reorder['mean_n_feval_reordered']}", flush=True)
+
+    compound = {"n": n2, "d": d, "b": b, "build_s": round(build2_s, 1),
+                "attr_kind": attr2.kind,
+                "routes": [bd["route"] for bd in compound_bands],
+                "bands": compound_bands, "mixed": cmixed,
+                "reorder": reorder}
+
     out = {"n": n, "d": d, "b": b, "k": k, "ls": ls,
            "build_s": round(build_s, 1),
            "row_bytes": row_bytes,
            "routes": [bd["route"] for bd in bands_out],
            "bands": bands_out,
-           "mixed": mixed}
+           "mixed": mixed,
+           "compound": compound}
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(out, fh, indent=1)
+    if args.compound_json:
+        with open(args.compound_json, "w") as fh:
+            json.dump(compound, fh, indent=1)
     return out
 
 

@@ -1,0 +1,72 @@
+"""Compound filter expressions: AND/OR/NOT trees over a composite index.
+
+Builds one JAG over a joint label+range attribute table, then serves a
+compound filter — ``(Label(9) | Label(1)) & Range(lo, hi)`` — through
+``search_auto``, printing the plan (composed selectivity, chosen route)
+and recall against exact ground truth. Finishes with the clause-reorder
+demo: the planner rewrites a worst-order AND so the most selective
+clause runs first, cutting short-circuit filter evaluations without
+changing a single result id.
+
+  PYTHONPATH=src python examples/compound_filters.py [--n 8000]
+"""
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+import repro
+from repro.core import filters as F
+from repro.core.recall import recall_at_k
+from repro.serve.planner import (PlannerConfig, explain, leaf_selectivities,
+                                 reorder_clauses)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    args = ap.parse_args()
+    n, d, b, k = args.n, 32, 64, 10
+
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(n, d)).astype(np.float32)
+    labels = rng.integers(0, 4, n).astype(np.int32)
+    labels[: n // 100] = 9                       # rare label, sel ~1%
+    rng.shuffle(labels)
+    vals = rng.uniform(0, 1, n).astype(np.float32)
+    attr = repro.joint_table(F.label_table(labels), F.range_table(vals))
+    index = repro.JAGIndex.build(xb, attr, repro.JAGConfig(degree=24))
+    q = (xb[rng.integers(0, n, b)]
+         + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
+
+    # one tree, every route: leaves are batched lanes, operators compose
+    zeros = np.zeros(b, np.float32)
+    expr = ((repro.Label(np.full(b, 9)) | repro.Label(np.full(b, 1)))
+            & repro.Range(zeros, np.full(b, 0.7, np.float32)))
+    gt = repro.exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q),
+                                  expr, k=k)
+    res, p = index.search_auto(q, expr, k=k, return_plan=True)
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                      np.asarray(gt.ids)).mean()
+    print(explain(p, PlannerConfig(), filt=expr))
+    print(f"compound search_auto: recall@{k}={rec:.3f}")
+
+    # clause reordering: same ids, fewer short-circuit evaluations
+    fixed = (repro.Range(zeros, np.full(b, 0.9, np.float32))
+             & repro.Label(np.full(b, 9)))
+    sels = np.median(np.asarray(leaf_selectivities(
+        fixed, attr, jnp.arange(n))), axis=1)
+    better = reorder_clauses(fixed, sels)
+    gt0 = repro.exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q),
+                                   fixed, k=k)
+    gt1 = repro.exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q),
+                                   better, k=k)
+    same = np.array_equal(np.asarray(gt0.ids), np.asarray(gt1.ids))
+    print(f"reorder {F.describe(fixed)} -> {F.describe(better)}: "
+          f"n_feval {float(np.asarray(gt0.n_feval).mean()):.0f} -> "
+          f"{float(np.asarray(gt1.n_feval).mean()):.0f}, "
+          f"ids identical: {same}")
+
+
+if __name__ == "__main__":
+    main()

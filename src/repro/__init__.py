@@ -1,0 +1,25 @@
+"""JAG: joint attribute graphs for filtered nearest neighbor search.
+
+The public filter surface is the expression tree: build leaves with
+``Label``/``Range``/``Subset``/``Boolean``, combine them with ``&``/``|``/
+``~``, and pass the result as ``filt`` to any ``JAGIndex.search*`` entry
+point. A single-leaf expression normalizes to its atomic ``FilterBatch``
+(``as_filter``) and runs the exact same compiled path, bit-identically.
+
+    import repro
+    f = repro.Label(3) & repro.Range(0.2, 0.8)
+    idx = repro.JAGIndex.build(xb, table, repro.JAGConfig())
+    res = idx.search_auto(q, f, k=10)
+"""
+from .core import (AttrTable, FilterBatch, JAGConfig, JAGIndex,
+                   SearchResult, matches, selectivity)
+from .core.filters import (And, Boolean, FilterExpr, Label, Not, Or, Range,
+                           Subset, as_filter, describe, filter_batch,
+                           joint_table, n_leaves)
+from .core.ground_truth import GroundTruth, exact_filtered_knn
+
+__all__ = ["And", "AttrTable", "Boolean", "FilterBatch", "FilterExpr",
+           "GroundTruth", "JAGConfig", "JAGIndex", "Label", "Not", "Or",
+           "Range", "SearchResult", "Subset", "as_filter", "describe",
+           "exact_filtered_knn", "filter_batch", "joint_table", "matches",
+           "n_leaves", "selectivity"]

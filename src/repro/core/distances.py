@@ -18,7 +18,9 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from .filters import FilterBatch, BOOLEAN, LABEL, RANGE, SUBSET, popcount
+from .filters import (FilterBatch, Leaf, And, Or, Not,
+                      BOOLEAN, LABEL, RANGE, SUBSET,
+                      is_composite, kind_components, popcount)
 
 INF = jnp.float32(jnp.inf)
 
@@ -27,8 +29,30 @@ INF = jnp.float32(jnp.inf)
 # dist_F : how far attribute a is from satisfying filter f  (§3.1 examples)
 # ---------------------------------------------------------------------------
 
-def dist_f(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-    """dist_F(f_q, a) for gathered candidate attrs [B, C, ...] -> f32[B, C]."""
+def dist_f(filt, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """dist_F(f_q, a) for gathered candidate attrs [B, C, ...] -> f32[B, C].
+
+    Compound expressions compose so the invariant ``dist_F == 0 iff
+    matches`` is preserved on every tree: And sums its clauses (zero iff
+    all zero), Or takes the min (zero iff any zero), Not maps to the
+    binary satisfied-indicator of its child (1.0 where the child matches).
+    The graph route's D_F comparator therefore traverses compound filters
+    natively — closer-to-satisfying regions still sort first.
+    """
+    if isinstance(filt, Leaf):
+        return dist_f(filt.filt, attrs)
+    if isinstance(filt, And):
+        out = dist_f(filt.children[0], attrs)
+        for c in filt.children[1:]:
+            out = out + dist_f(c, attrs)
+        return out
+    if isinstance(filt, Or):
+        out = dist_f(filt.children[0], attrs)
+        for c in filt.children[1:]:
+            out = jnp.minimum(out, dist_f(c, attrs))
+        return out
+    if isinstance(filt, Not):
+        return (dist_f(filt.child, attrs) <= 0.0).astype(jnp.float32)
     k = filt.kind
     if k == LABEL:
         return (attrs["label"] != filt.data["label"][:, None]).astype(
@@ -53,7 +77,17 @@ def dist_f(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
 
 def dist_a(kind: str, a_p: Dict[str, jnp.ndarray],
            a_c: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-    """dist_A(a_p, a_c): base attrs [B, ...] vs candidates [B, C, ...]."""
+    """dist_A(a_p, a_c): base attrs [B, ...] vs candidates [B, C, ...].
+
+    Composite kinds ("label+range") sum their components' attribute
+    distances, so joint tables build/calibrate with one comparator.
+    """
+    if is_composite(kind):
+        parts = [dist_a(k2, a_p, a_c) for k2 in kind_components(kind)]
+        out = parts[0]
+        for p in parts[1:]:
+            out = out + p
+        return out
     if kind == LABEL:
         return (a_p["label"][:, None] != a_c["label"]).astype(jnp.float32)
     if kind == RANGE:
@@ -98,8 +132,12 @@ KeyFn = Callable[[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray],
                  tuple[jnp.ndarray, jnp.ndarray]]
 
 
-def query_key_fn(filt: FilterBatch) -> KeyFn:
-    """D_F(q, u) = (dist_F(f_q, a_u), dist(x_q, x_u)) — Algorithm 2."""
+def query_key_fn(filt) -> KeyFn:
+    """D_F(q, u) = (dist_F(f_q, a_u), dist(x_q, x_u)) — Algorithm 2.
+
+    ``filt`` may be an atomic FilterBatch or a compound FilterExpr (dist_f
+    composes over the tree).
+    """
     def key_fn(ids, attrs, d2):
         del ids
         return dist_f(filt, attrs), d2

@@ -19,8 +19,9 @@ Attribute tables and filter batches are registered dataclass pytrees whose
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,21 @@ RANGE = "range"
 SUBSET = "subset"
 BOOLEAN = "boolean"
 KINDS = (LABEL, RANGE, SUBSET, BOOLEAN)
+
+
+def kind_components(kind: str) -> Tuple[str, ...]:
+    """Atomic components of a (possibly composite) attr-table kind.
+
+    Composite kinds name a table carrying several attribute families at
+    once — e.g. ``"label+range"`` — so a compound filter expression can mix
+    leaf families over one dataset. Atomic kinds are their own single
+    component.
+    """
+    return tuple(kind.split("+"))
+
+
+def is_composite(kind: str) -> bool:
+    return "+" in kind
 
 MAX_BOOL_VARS = 20  # distance table is 2**L floats; 20 -> 4 MiB per query.
 
@@ -93,7 +109,13 @@ def _f32_to_u32(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def attr_word_width(kind: str, n_bits: int = 0) -> int:
-    """Number of f32 attr words per row in the fused serving layout."""
+    """Number of f32 attr words per row in the fused serving layout.
+
+    Composite kinds (``"label+range"``) lay their components' words out
+    consecutively, so the width is the sum of the component widths.
+    """
+    if is_composite(kind):
+        return sum(attr_word_width(k, n_bits) for k in kind_components(kind))
     if kind in (LABEL, RANGE, BOOLEAN):
         return 1
     if kind == SUBSET:
@@ -108,6 +130,12 @@ def pack_attr_words(table: "AttrTable") -> jnp.ndarray:
     (already f32). Inverse of :func:`unpack_attr_words`.
     """
     k = table.kind
+    if is_composite(k):
+        # component packers only read their own data keys, so a sub-view
+        # over the shared dict suffices; words concatenate in kind order
+        return jnp.concatenate(
+            [pack_attr_words(AttrTable(k2, table.data, table.n_bits))
+             for k2 in kind_components(k)], axis=-1)
     if k == LABEL:
         return jax.lax.bitcast_convert_type(
             jnp.asarray(table.data["label"], jnp.int32),
@@ -129,6 +157,16 @@ def unpack_attr_words(kind: str, words: jnp.ndarray, n_bits: int = 0,
     The result has the same shapes/dtypes ``AttrTable.gather`` would produce
     for the same ids, so it can feed ``dist_f``/``matches`` unchanged.
     """
+    if is_composite(kind):
+        out: Dict[str, jnp.ndarray] = {}
+        off = 0
+        for k2 in kind_components(kind):
+            w = attr_word_width(k2, n_bits)
+            out.update(unpack_attr_words(
+                k2, words[..., off:off + w], n_bits,
+                bit_weights if k2 == SUBSET else None))
+            off += w
+        return out
     if kind == LABEL:
         return {"label": _f32_to_u32(words[..., 0]).astype(jnp.int32)}
     if kind == RANGE:
@@ -224,6 +262,42 @@ def boolean_table(assign, n_vars: int) -> AttrTable:
                      n_bits=int(n_vars))
 
 
+def joint_table(*tables: AttrTable) -> AttrTable:
+    """Join per-kind attribute tables into one composite table.
+
+    The composite kind is the ``"+"``-joined component kinds (in the given
+    order); its data dict is the union of the component dicts (the per-kind
+    keys never collide). Mixed-kind compound filters — e.g. a rare-label AND
+    wide-range conjunction — evaluate each leaf against its own component.
+    Constraints: at most one table per atomic kind; bit-carrying kinds
+    (subset/boolean) must agree on ``n_bits`` (the composite carries one
+    shared value); ``bit_weights`` is per-table state and unsupported here.
+    """
+    if len(tables) < 2:
+        raise ValueError("joint_table needs >= 2 component tables")
+    kinds, data, n_bits, n = [], {}, 0, None
+    for t in tables:
+        if is_composite(t.kind):
+            raise ValueError(f"components must be atomic, got {t.kind!r}")
+        if t.kind in kinds:
+            raise ValueError(f"duplicate component kind {t.kind!r}")
+        if "bit_weights" in t.data:
+            raise ValueError("bit_weights is unsupported in joint tables")
+        if t.n_bits:
+            if n_bits and t.n_bits != n_bits:
+                raise ValueError(
+                    f"bit-kind components disagree on n_bits: "
+                    f"{n_bits} vs {t.n_bits}")
+            n_bits = t.n_bits
+        if n is None:
+            n = t.n
+        elif t.n != n:
+            raise ValueError(f"component row counts differ: {n} vs {t.n}")
+        kinds.append(t.kind)
+        data.update(t.data)
+    return AttrTable("+".join(kinds), data, n_bits=n_bits)
+
+
 # ---------------------------------------------------------------------------
 # filter batch (per-query constraints)
 # ---------------------------------------------------------------------------
@@ -317,14 +391,298 @@ def boolean_filters(sat: jnp.ndarray, n_vars: int) -> FilterBatch:
 
 
 # ---------------------------------------------------------------------------
+# filter expression trees: And / Or / Not over the four atomic leaves
+#
+# Expressions are the public filter surface. ``Label(3) & Range(0, 1)``
+# builds a tree whose nodes are registered pytrees, so a whole expression
+# flows through jax.jit like a FilterBatch does: the tree *structure* (and
+# each leaf's static kind) lives in the treedef, only the lane arrays are
+# traced. ``expr.kind`` is a structural signature string — "(label&range)" —
+# so every cache key that today stores ``filt.kind`` works unchanged.
+# ---------------------------------------------------------------------------
+
+class FilterExpr:
+    """Base class of compound filter expressions.
+
+    Combine with the python operators: ``a & b`` (And), ``a | b`` (Or),
+    ``~a`` (Not). Operands may be FilterExpr or raw FilterBatch (coerced to
+    a Leaf). Same-op children flatten, so ``a & b & c`` is one 3-clause And.
+    """
+
+    def __and__(self, other):
+        return _combine(And, self, other)
+
+    def __rand__(self, other):
+        return _combine(And, other, self)
+
+    def __or__(self, other):
+        return _combine(Or, self, other)
+
+    def __ror__(self, other):
+        return _combine(Or, other, self)
+
+    def __invert__(self):
+        if isinstance(self, Not):
+            return self.child
+        return Not(self)
+
+    def __repr__(self) -> str:
+        return f"FilterExpr<{describe(self)}>"
+
+    @property
+    def kind(self) -> str:
+        """Structural signature, e.g. ``"(label&~range)"``: static per
+        tree shape, so executor/planner cache keys distinguish expression
+        structures exactly as they distinguish atomic kinds."""
+        raise NotImplementedError
+
+    @property
+    def batch(self) -> int:
+        return self.leaves()[0].batch
+
+    @property
+    def n_bits(self) -> int:
+        return max(f.n_bits for f in self.leaves())
+
+    def leaves(self) -> list:
+        """The atomic FilterBatch leaves, depth-first left-to-right."""
+        raise NotImplementedError
+
+    def _map_leaves(self, fn) -> "FilterExpr":
+        raise NotImplementedError
+
+    def lane(self, i: int) -> "FilterExpr":
+        return self._map_leaves(lambda f: f.lane(i))
+
+    def take(self, ids) -> "FilterExpr":
+        """Group-gather every leaf's lanes (see FilterBatch.take): the
+        per-query dispatcher hands each route group a sub-batch of the
+        whole tree."""
+        ids = jnp.asarray(ids, jnp.int32)
+        return self._map_leaves(lambda f: f.take(ids))
+
+
+def _coerce(x) -> FilterExpr:
+    if isinstance(x, FilterExpr):
+        return x
+    if isinstance(x, FilterBatch):
+        return Leaf(x)
+    raise TypeError(f"expected FilterExpr or FilterBatch, got {type(x)!r}")
+
+
+def _combine(cls, a, b) -> FilterExpr:
+    kids = []
+    for x in (_coerce(a), _coerce(b)):
+        kids.extend(x.children if isinstance(x, cls) else (x,))
+    return cls(*kids)
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class Leaf(FilterExpr):
+    """An atomic filter wrapped as an expression node."""
+    filt: FilterBatch
+
+    @property
+    def kind(self) -> str:
+        return self.filt.kind
+
+    def leaves(self) -> list:
+        return [self.filt]
+
+    def _map_leaves(self, fn) -> "Leaf":
+        return Leaf(fn(self.filt))
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False, init=False)
+class And(FilterExpr):
+    """Conjunction: every clause must match."""
+    children: Tuple[FilterExpr, ...]
+
+    def __init__(self, *children):
+        if len(children) == 1 and isinstance(children[0], (tuple, list)):
+            children = tuple(children[0])
+        if len(children) < 2:
+            raise ValueError("And needs >= 2 clauses")
+        object.__setattr__(self, "children",
+                           tuple(_coerce(c) for c in children))
+
+    @property
+    def kind(self) -> str:
+        return "(" + "&".join(c.kind for c in self.children) + ")"
+
+    def leaves(self) -> list:
+        return [f for c in self.children for f in c.leaves()]
+
+    def _map_leaves(self, fn) -> "And":
+        return And(*[c._map_leaves(fn) for c in self.children])
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False, init=False)
+class Or(FilterExpr):
+    """Disjunction: at least one clause must match."""
+    children: Tuple[FilterExpr, ...]
+
+    def __init__(self, *children):
+        if len(children) == 1 and isinstance(children[0], (tuple, list)):
+            children = tuple(children[0])
+        if len(children) < 2:
+            raise ValueError("Or needs >= 2 clauses")
+        object.__setattr__(self, "children",
+                           tuple(_coerce(c) for c in children))
+
+    @property
+    def kind(self) -> str:
+        return "(" + "|".join(c.kind for c in self.children) + ")"
+
+    def leaves(self) -> list:
+        return [f for c in self.children for f in c.leaves()]
+
+    def _map_leaves(self, fn) -> "Or":
+        return Or(*[c._map_leaves(fn) for c in self.children])
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False, init=False)
+class Not(FilterExpr):
+    """Negation of a sub-expression."""
+    child: FilterExpr
+
+    def __init__(self, child):
+        object.__setattr__(self, "child", _coerce(child))
+
+    @property
+    def kind(self) -> str:
+        return "~" + self.child.kind
+
+    def leaves(self) -> list:
+        return self.child.leaves()
+
+    def _map_leaves(self, fn) -> "Not":
+        return Not(self.child._map_leaves(fn))
+
+
+jax.tree_util.register_pytree_node(
+    Leaf, lambda e: ((e.filt,), None), lambda _, c: Leaf(c[0]))
+jax.tree_util.register_pytree_node(
+    And, lambda e: (e.children, None), lambda _, c: And(*c))
+jax.tree_util.register_pytree_node(
+    Or, lambda e: (e.children, None), lambda _, c: Or(*c))
+jax.tree_util.register_pytree_node(
+    Not, lambda e: ((e.child,), None), lambda _, c: Not(c[0]))
+
+
+def Label(labels) -> Leaf:
+    """Expression leaf: label equality. Scalar or [B] per-query labels."""
+    return Leaf(label_filters(jnp.atleast_1d(jnp.asarray(labels, jnp.int32))))
+
+
+def Range(lo, hi) -> Leaf:
+    """Expression leaf: closed numeric range [lo, hi]. Scalars or [B]."""
+    lo = jnp.atleast_1d(jnp.asarray(lo, jnp.float32))
+    hi = jnp.atleast_1d(jnp.asarray(hi, jnp.float32))
+    lo, hi = jnp.broadcast_arrays(lo, hi)
+    return Leaf(range_filters(lo, hi))
+
+
+def Subset(bits, n_bits: Optional[int] = None) -> Leaf:
+    """Expression leaf: required-tag containment.
+
+    ``bits``: boolean [L] / [B, L] (n_bits inferred as L) or packed uint32
+    [W] / [B, W] (``n_bits`` required).
+    """
+    bits = jnp.asarray(bits)
+    if bits.ndim == 1:
+        bits = bits[None]
+    if bits.dtype != jnp.uint32:
+        if n_bits is None:
+            n_bits = bits.shape[-1]
+    elif n_bits is None:
+        raise ValueError("n_bits is required for packed uint32 bits")
+    return Leaf(subset_filters(bits, n_bits))
+
+
+def Boolean(sat, n_vars: Optional[int] = None) -> Leaf:
+    """Expression leaf: arbitrary boolean predicate as a truth table.
+
+    ``sat``: bool [2**L] or [B, 2**L]; ``n_vars`` (= L) inferred from the
+    table size when omitted.
+    """
+    sat = jnp.asarray(sat, jnp.bool_)
+    if sat.ndim == 1:
+        sat = sat[None]
+    if n_vars is None:
+        n_vars = int(sat.shape[-1]).bit_length() - 1
+        if (1 << n_vars) != sat.shape[-1]:
+            raise ValueError(f"truth table size {sat.shape[-1]} is not 2**L")
+    return Leaf(boolean_filters(sat, n_vars))
+
+
+def as_filter(filt):
+    """Normalize the public ``filt`` argument.
+
+    A single-leaf expression unwraps to its FilterBatch, so it runs the
+    existing atomic path bit-identically (same executor cache key, same
+    compiled fn). Compound expressions and raw FilterBatch pass through.
+    """
+    if isinstance(filt, Leaf):
+        return filt.filt
+    if isinstance(filt, (FilterBatch, FilterExpr)):
+        return filt
+    raise TypeError(f"expected FilterExpr or FilterBatch, got {type(filt)!r}")
+
+
+def n_leaves(filt) -> int:
+    """Clause count: 1 for an atomic FilterBatch, #leaves for a tree."""
+    return len(filt.leaves()) if isinstance(filt, FilterExpr) else 1
+
+
+def filter_batch(kind: str, data, n_bits: int = 0) -> FilterBatch:
+    """Deprecated raw kind-enum constructor.
+
+    Build filters with the expression constructors (``Label``, ``Range``,
+    ``Subset``, ``Boolean``) or the per-kind ``*_filters`` helpers instead.
+    """
+    warnings.warn(
+        "filter_batch(kind, data) is deprecated; build filters with the "
+        "expression constructors Label/Range/Subset/Boolean (combine with "
+        "& | ~) or the *_filters helpers",
+        DeprecationWarning, stacklevel=2)
+    return FilterBatch(kind, dict(data), n_bits=int(n_bits))
+
+
+def describe(filt) -> str:
+    """Human-readable expression string (host-side; used by explain())."""
+    if isinstance(filt, Leaf):
+        return describe(filt.filt)
+    if isinstance(filt, And):
+        return "(" + " & ".join(describe(c) for c in filt.children) + ")"
+    if isinstance(filt, Or):
+        return "(" + " | ".join(describe(c) for c in filt.children) + ")"
+    if isinstance(filt, Not):
+        return "~" + describe(filt.child)
+    k = filt.kind
+    if k == LABEL:
+        u = np.unique(np.asarray(filt.data["label"]))
+        return f"label={u[0]}" if u.size == 1 else f"label[{filt.batch}]"
+    if k == RANGE:
+        lo = np.unique(np.asarray(filt.data["lo"]))
+        hi = np.unique(np.asarray(filt.data["hi"]))
+        if lo.size == 1 and hi.size == 1:
+            return f"range[{lo[0]:g},{hi[0]:g}]"
+        return f"range[{filt.batch} lanes]"
+    if k == SUBSET:
+        return f"subset[{filt.n_bits}b]"
+    if k == BOOLEAN:
+        return f"boolean[{filt.n_bits}v]"
+    return k
+
+
+# ---------------------------------------------------------------------------
 # exact pass/fail (the binary g(a, f)), used for recall + pre/post filtering
 # ---------------------------------------------------------------------------
 
-def matches(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-    """g(a_p, f_q) = 1. ``attrs`` gathered to shape [B, C, ...]; filt is [B].
-
-    Returns bool[B, C].
-    """
+def _matches_atomic(filt: FilterBatch,
+                    attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Atomic g(a_p, f_q): attrs [B, C, ...] or broadcastable [1, C, ...]."""
     k = filt.kind
     if k == LABEL:
         return attrs["label"] == filt.data["label"][:, None]
@@ -338,45 +696,120 @@ def matches(filt: FilterBatch, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         return jnp.all((f & ~a) == 0, axis=-1)
     if k == BOOLEAN:
         a = attrs["assign"].astype(jnp.int32)
+        a = jnp.broadcast_to(a, (filt.batch,) + a.shape[1:])
         return jnp.take_along_axis(filt.data["sat"], a, axis=-1)
     raise ValueError(k)
 
 
-def matches_sampled(filt: FilterBatch, table: AttrTable,
-                    ids: jnp.ndarray) -> jnp.ndarray:
+def _eval_counted(filt, leaf_fn):
+    """Recursive short-circuit evaluation: (ok bool[B, C], evals int32[B, C]).
+
+    ``evals`` counts leaf evaluations under left-to-right short-circuit
+    semantics — an And stops at its first failing clause, an Or at its first
+    match. XLA cannot skip lanes, so the count is the *model* the clause
+    reorderer optimizes and the benchmark reports (n_feval), while ``ok``
+    itself is evaluated dense. Tree recursion unrolls at trace time (the
+    structure is static), so the whole thing jits.
+    """
+    if isinstance(filt, FilterBatch):
+        ok = leaf_fn(filt)
+        return ok, jnp.ones(ok.shape, jnp.int32)
+    if isinstance(filt, Leaf):
+        return _eval_counted(filt.filt, leaf_fn)
+    if isinstance(filt, Not):
+        ok, ev = _eval_counted(filt.child, leaf_fn)
+        return ~ok, ev
+    if isinstance(filt, (And, Or)):
+        is_and = isinstance(filt, And)
+        ok, ev = _eval_counted(filt.children[0], leaf_fn)
+        for c in filt.children[1:]:
+            okc, evc = _eval_counted(c, leaf_fn)
+            live = ok if is_and else ~ok
+            ev = ev + jnp.where(live, evc, 0)
+            ok = (ok & okc) if is_and else (ok | okc)
+        return ok, ev
+    raise TypeError(f"not a filter: {type(filt)!r}")
+
+
+def matches(filt, attrs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """g(a_p, f_q) = 1. ``attrs`` gathered to shape [B, C, ...]; filt is an
+    atomic FilterBatch or a FilterExpr tree over batch B.
+
+    Returns bool[B, C].
+    """
+    if isinstance(filt, FilterExpr):
+        return _eval_counted(filt, lambda f: _matches_atomic(f, attrs))[0]
+    return _matches_atomic(filt, attrs)
+
+
+def matches_counted(filt, attrs: Dict[str, jnp.ndarray]):
+    """(ok bool[B, C], short-circuit leaf evals int32[B, C])."""
+    return _eval_counted(filt, lambda f: _matches_atomic(f, attrs))
+
+
+def _broadcast_rows(table: AttrTable, ids: jnp.ndarray):
+    """Sample-row attrs dict gathered ONCE and broadcast [1, S, ...]."""
+    attrs = table.gather(ids)
+    return {k: (v[None] if k != "bit_weights" else v)
+            for k, v in attrs.items()}
+
+
+def matches_sampled(filt, table: AttrTable, ids: jnp.ndarray) -> jnp.ndarray:
     """Validity over a fixed sample: bool[B, S] for sample ids int32[S].
 
     The jit-compatible probe behind the query planner's selectivity
     estimator (serve/planner.py): the S sampled attribute rows are gathered
     ONCE and broadcast [1, S, ...] against the filter batch [B] — never a
-    B*S gather.
+    B*S gather. Accepts expressions (leaves combine word-wise).
     """
     ids = jnp.asarray(ids, jnp.int32)
-    attrs = table.gather(ids)  # [S, ...]
+    return matches(filt, _broadcast_rows(table, ids))
+
+
+def _onehot_words(assign: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Packed one-hot rows: bit assign[s] set in uint32 words [S, W]."""
+    idx = jnp.arange(size, dtype=jnp.uint32)
+    return pack_bits(idx[None, :] == jnp.asarray(assign, jnp.uint32)[:, None])
+
+
+def matches_rows(filt, table: AttrTable, ids: jnp.ndarray,
+                 use_kernel: bool = False):
+    """Validity + eval counts over sample rows: (bool[B, S], int32[B, S]).
+
+    The prefilter scan's per-block evaluator. With ``use_kernel`` the
+    subset/boolean leaf validity runs through the Pallas popcount kernel
+    (kernels/bitset.py): subset passes iff the deficit |f \\ a| is 0;
+    boolean packs each query's satisfying set into bitset words and tests
+    membership of the point's assignment via a one-hot deficit — both are
+    word-wise VPU scans over the packed rows. Other leaf kinds (and the
+    non-kernel path) use the dense comparators. Results are identical
+    either way.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    raw = table.gather(ids)          # [S, ...]
     attrs = {k: (v[None] if k != "bit_weights" else v)
-             for k, v in attrs.items()}
-    k = filt.kind
-    if k == LABEL:
-        return attrs["label"] == filt.data["label"][:, None]
-    if k == RANGE:
-        v = attrs["value"]
-        return ((v >= filt.data["lo"][:, None]) &
-                (v <= filt.data["hi"][:, None]))
-    if k == SUBSET:
-        f = filt.data["bits"][:, None, :]
-        a = attrs["bits"]
-        return jnp.all((f & ~a) == 0, axis=-1)
-    if k == BOOLEAN:
-        a = jnp.broadcast_to(attrs["assign"].astype(jnp.int32),
-                             (filt.batch, ids.shape[0]))
-        return jnp.take_along_axis(filt.data["sat"], a, axis=-1)
-    raise ValueError(k)
+             for k, v in raw.items()}
+
+    def leaf_fn(f: FilterBatch):
+        if use_kernel and f.kind == SUBSET:
+            from ..kernels import ops as _ops
+            return _ops.subset_deficit(f.data["bits"], raw["bits"]) == 0
+        if use_kernel and f.kind == BOOLEAN:
+            from ..kernels import ops as _ops
+            sat_w = pack_bits(f.data["sat"])                  # [B, W]
+            hot = _onehot_words(raw["assign"], f.data["sat"].shape[-1])
+            # deficit(sat, onehot(a)) = popcount(sat) - sat[a]
+            defc = _ops.subset_deficit(sat_w, hot)            # [B, S]
+            return defc == (popcount(sat_w)[:, None] - 1)
+        return _matches_atomic(f, attrs)
+
+    return _eval_counted(filt, leaf_fn)
 
 
-def matches_all(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
+def matches_all(filt, table: AttrTable) -> jnp.ndarray:
     """Full validity matrix bool[B, N] (used by pre-filter / ground truth)."""
     return matches_sampled(filt, table, jnp.arange(table.n))
 
 
-def selectivity(filt: FilterBatch, table: AttrTable) -> jnp.ndarray:
+def selectivity(filt, table: AttrTable) -> jnp.ndarray:
     return jnp.mean(matches_all(filt, table).astype(jnp.float32), axis=-1)

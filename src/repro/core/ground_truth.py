@@ -18,20 +18,28 @@ import jax
 import jax.numpy as jnp
 
 from .distances import INF, sq_norms
-from .filters import AttrTable, FilterBatch, matches_sampled
+from .filters import AttrTable, matches_rows
 
 
 class GroundTruth(NamedTuple):
     ids: jnp.ndarray   # int32 [B, k], -1 where fewer than k valid points
     d2: jnp.ndarray    # f32 [B, k]
     n_dist: jnp.ndarray  # int32 [B]: #valid points scanned (paper Table 1 DC)
+    n_feval: jnp.ndarray  # int32 [B]: short-circuit filter-clause evals
 
 
 @partial(jax.jit, static_argnames=("k", "block", "use_kernel"))
-def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
+def exact_filtered_knn(xb, attr: AttrTable, queries, filt,
                        k: int = 10, block: int = 4096,
                        use_kernel: bool = False) -> GroundTruth:
-    """Exact top-k among filter-satisfying points, blocked scan."""
+    """Exact top-k among filter-satisfying points, blocked scan.
+
+    ``filt`` may be an atomic FilterBatch or a compound FilterExpr; the
+    validity scan evaluates the tree per block with left-to-right
+    short-circuit accounting (``n_feval`` — what the planner's clause
+    reordering minimizes). ``use_kernel`` also routes the subset/boolean
+    leaf validity through the Pallas popcount kernel (kernels/bitset.py).
+    """
     N, d = xb.shape
     B = queries.shape[0]
     xb32 = xb.astype(jnp.float32)
@@ -49,9 +57,10 @@ def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
     top_d = jnp.full((B, k), INF)
     top_i = jnp.full((B, k), -1, jnp.int32)
     ndist = jnp.zeros((B,), jnp.int32)
+    nfeval = jnp.zeros((B,), jnp.int32)
 
     def body(bi, carry):
-        top_d, top_i, ndist = carry
+        top_d, top_i, ndist, nfeval = carry
         ids = bi * block + jnp.arange(block)
         inb = ids < N
         idc = jnp.minimum(ids, N - 1)
@@ -66,16 +75,19 @@ def exact_filtered_knn(xb, attr: AttrTable, queries, filt: FilterBatch,
         # gather the block's [block] attr rows ONCE and broadcast against
         # the filter batch — the old [B, block] id matrix repeated the same
         # gather B times per block on the prefilter hot path
-        ok = matches_sampled(filt, attr, idc) & inb[None, :]
+        ok, ev = matches_rows(filt, attr, idc, use_kernel=use_kernel)
+        ok = ok & inb[None, :]
         d2 = jnp.where(ok, jnp.maximum(d2, 0.0), INF)
         ndist = ndist + jnp.sum(ok, axis=1, dtype=jnp.int32)
+        nfeval = nfeval + jnp.sum(
+            jnp.where(inb[None, :], ev, 0), axis=1, dtype=jnp.int32)
         cd = jnp.concatenate([top_d, d2], axis=1)
         ci = jnp.concatenate(
             [top_i, jnp.where(ok, ids[None, :], -1)], axis=1)
         cd, ci = jax.lax.sort((cd, ci), num_keys=1)
-        return cd[:, :k], ci[:, :k], ndist
+        return cd[:, :k], ci[:, :k], ndist, nfeval
 
-    top_d, top_i, ndist = jax.lax.fori_loop(
-        0, nblk, body, (top_d, top_i, ndist))
+    top_d, top_i, ndist, nfeval = jax.lax.fori_loop(
+        0, nblk, body, (top_d, top_i, ndist, nfeval))
     top_i = jnp.where(jnp.isinf(top_d), -1, top_i)
-    return GroundTruth(top_i, top_d, ndist)
+    return GroundTruth(top_i, top_d, ndist, nfeval)

@@ -22,7 +22,7 @@ import numpy as np
 from .beam_search import SearchResult
 from .build import BuildConfig, build_graph
 from .distances import dist_a, sq_norms
-from .filters import AttrTable, FilterBatch
+from .filters import AttrTable, as_filter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,20 +205,24 @@ class JAGIndex:
         self.cost_metric = metric
 
     # -- query (Algorithm 2) ------------------------------------------------
-    def search(self, queries, filt: FilterBatch, k: int = 10,
+    def search(self, queries, filt, k: int = 10,
                ls: int = 64, max_iters: int = 0,
                layout: str = "default") -> SearchResult:
         """Filtered top-k search under D_F = (dist_F, dist_vec).
 
-        ``layout="fused"`` routes beam expansions through the packed serving
-        layout (one gather per expansion via greedy_search's ``fetch_fn``
-        hook) and returns identical ids/keys to the default two-gather path.
+        ``filt`` is a filter expression (``Label``/``Range``/``Subset``/
+        ``Boolean`` leaves combined with ``&``/``|``/``~``) or a raw
+        per-kind ``FilterBatch``; a single-leaf expression normalizes to
+        the atomic path bit-identically. ``layout="fused"`` routes beam
+        expansions through the packed serving layout (one gather per
+        expansion via greedy_search's ``fetch_fn`` hook) and returns
+        identical ids/keys to the default two-gather path.
         """
-        return self.executor.graph(queries, filt, k=k, ls=ls,
+        return self.executor.graph(queries, as_filter(filt), k=k, ls=ls,
                                    max_iters=max_iters or 2 * ls,
                                    layout=layout, dtype="f32")
 
-    def search_int8(self, queries, filt: FilterBatch, k: int = 10,
+    def search_int8(self, queries, filt, k: int = 10,
                     ls: int = 64, max_iters: int = 0,
                     layout: str = "default") -> SearchResult:
         """Quantized traversal + exact re-rank (beyond-paper; §Perf).
@@ -230,7 +234,7 @@ class JAGIndex:
         [int8 vec | norm | attr] so navigation costs ONE gather per
         expansion instead of two.
         """
-        return self.executor.graph(queries, filt, k=k, ls=ls,
+        return self.executor.graph(queries, as_filter(filt), k=k, ls=ls,
                                    max_iters=max_iters or 2 * ls,
                                    layout=layout, dtype="int8")
 
@@ -240,7 +244,7 @@ class JAGIndex:
         return self.executor.unfiltered(queries, k=k, ls=ls,
                                         max_iters=max_iters or 2 * ls)
 
-    def search_auto(self, queries, filt: FilterBatch, k: int = 10,
+    def search_auto(self, queries, filt, k: int = 10,
                     ls: int = 64, max_iters: int = 0,
                     planner=None, return_plan: bool = False,
                     mode: str = "per_query", layout: str = "default",
@@ -273,13 +277,14 @@ class JAGIndex:
         from ..serve.dispatch import dispatch_per_query, run_route
         from ..serve.planner import (PlannerConfig, plan as _plan,
                                      plan_per_query)
+        filt = as_filter(filt)
         cfg = planner or PlannerConfig()
         mi = max_iters or 2 * ls
         # an explicit planner= override is an explicit routing instruction
         # (e.g. prefilter_max_sel=1.1 forcing the exact scan everywhere) —
         # an attached cost model must never shadow it
         router = (None if planner is not None
-                  else self.executor.cost_router(k=k, ls=ls))
+                  else self.executor.cost_router(k=k, ls=ls, filt=filt))
         if mode == "per_query":
             p = plan_per_query(filt, self.attr, cfg, executor=self.executor,
                                router=router)

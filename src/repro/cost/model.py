@@ -48,8 +48,14 @@ _EPS = 1e-4                       # selectivity floor inside log terms
 # so a minimal grid (two delta_n points at one d) fully determines it —
 # compaction work is insert passes over delta rows, each ~ d-proportional.
 _TERMS = {
+    # n_clauses (compound-filter clause count) is appended LAST so legacy
+    # 3-coefficient prefilter models stay valid: predict() zero-pads short
+    # coefficient vectors, and log(n_clauses)=0 at the atomic default of 1,
+    # so old models' predictions are bit-identical (append-only term
+    # policy — new terms must default to a canonical value whose log is 0).
     "prefilter": (("log(n*d)", lambda c: c["n"] * c["d"]),
-                  ("log(sel)", lambda c: c["sel"])),
+                  ("log(sel)", lambda c: c["sel"]),
+                  ("log(n_clauses)", lambda c: c["n_clauses"])),
     "graph": (("log(ls*d)", lambda c: c["ls"] * c["d"]),
               ("log(sel)", lambda c: c["sel"]),
               ("log(n)", lambda c: c["n"])),
@@ -72,7 +78,8 @@ def _canon(features: Dict[str, float]) -> Dict[str, float]:
                 d=max(float(f.get("d", 1.0)), 1.0),
                 ls=max(float(f.get("ls", 64.0)), 1.0),
                 k=max(float(f.get("k", 10.0)), 1.0),
-                delta_n=max(float(f.get("delta_n", 0.0)), 1.0))
+                delta_n=max(float(f.get("delta_n", 0.0)), 1.0),
+                n_clauses=max(float(f.get("n_clauses", 1.0)), 1.0))
 
 
 def feature_names(route: str) -> Tuple[str, ...]:
@@ -131,9 +138,23 @@ class CostModel:
 
     def predict(self, route: str, features: Dict[str, float],
                 metric: str = "us") -> float:
-        """Predicted cost (always positive: exp of the fitted log-cost)."""
+        """Predicted cost (always positive: exp of the fitted log-cost).
+
+        Coefficient vectors shorter than the current feature table are
+        zero-padded: feature terms are append-only and new terms log to 0
+        at their canonical default, so a legacy model predicts exactly
+        what it predicted when it was fitted.
+        """
         w = np.asarray(self.coef[route][metric], np.float64)
-        return float(math.exp(float(phi(route, features) @ w)))
+        x = phi(route, features)
+        if w.shape[0] < x.shape[0]:
+            w = np.pad(w, (0, x.shape[0] - w.shape[0]))
+        elif w.shape[0] > x.shape[0]:
+            raise ValueError(
+                f"{route}/{metric} has {w.shape[0]} coefficients but "
+                f"phi() has {x.shape[0]} terms — model is from a newer "
+                f"feature table")
+        return float(math.exp(float(x @ w)))
 
 
 def fit(observations: Sequence[Observation],
@@ -157,7 +178,12 @@ def fit(observations: Sequence[Observation],
         for metric in METRICS:
             y = np.asarray([getattr(ob, metric) for ob in obs], np.float64)
             ok = y > 0
-            if int(ok.sum()) < X.shape[1]:
+            # a term whose column is identically zero on this grid (e.g.
+            # log(n_clauses) when every observation is an atomic filter)
+            # is structurally absent: it costs no degree of freedom, and
+            # min-norm lstsq pins its coefficient at exactly 0
+            n_params = int(np.any(X[ok] != 0.0, axis=0).sum())
+            if int(ok.sum()) < n_params:
                 continue
             w, *_ = np.linalg.lstsq(X[ok], np.log(y[ok]), rcond=None)
             fitted[metric] = [float(v) for v in w]
@@ -187,7 +213,7 @@ class CostModelRouter:
 
     def __init__(self, model: CostModel, *, n: int, d: int, k: int,
                  ls: int, delta_n: int = 0, b: int = 1, metric: str = "us",
-                 routes: Tuple[str, ...] = BASE_ROUTES):
+                 routes: Tuple[str, ...] = BASE_ROUTES, n_leaves: int = 1):
         if not model.covers(routes, metric):
             raise ValueError(f"model covers {model.routes()}, router needs "
                              f"{routes} ({metric}) — fall back to static "
@@ -197,12 +223,16 @@ class CostModelRouter:
         self.metric = metric       # "us" (wall) or "n_dist" (the DC metric)
         self.n, self.d, self.k, self.ls = int(n), int(d), int(k), int(ls)
         self.delta_n, self.b = int(delta_n), int(b)
+        # compound-filter clause count -> the prefilter log(n_clauses)
+        # term; 1 (atomic) contributes nothing, so legacy behavior holds
+        self.n_leaves = max(int(n_leaves), 1)
         self.delta_tax = delta_scan_tax(model, n=n, d=d, k=k,
                                         delta_n=delta_n, metric=metric)
 
     def features(self, sel: float) -> Dict[str, float]:
         return dict(sel=float(sel), n=self.n, d=self.d, k=self.k,
-                    ls=self.ls, delta_n=self.delta_n, b=self.b)
+                    ls=self.ls, delta_n=self.delta_n, b=self.b,
+                    n_clauses=self.n_leaves)
 
     def costs(self, sel: float) -> Dict[str, float]:
         """Predicted cost/query per base route (delta tax folded in)."""

@@ -18,12 +18,14 @@ from .executor import Executor
 from .layout import (FusedLayout, build_layout, extend_layout, load_layout,
                      save_layout)
 from .planner import (GroupPlan, Plan, PerQueryPlan, PlannerConfig, ROUTES,
-                      choose_route, estimate_selectivity, explain, plan,
-                      plan_per_query, sample_ids)
+                      choose_route, clause_eval_cost, estimate_selectivity,
+                      explain, leaf_selectivities, plan, plan_per_query,
+                      reorder_clauses, sample_ids)
 
 __all__ = ["Executor", "FusedEngine", "FusedLayout", "GroupPlan", "Plan",
            "PerQueryPlan", "PlannerConfig", "ROUTES", "build_layout",
-           "choose_route", "dispatch_per_query", "estimate_selectivity",
-           "explain", "extend_layout", "load_layout", "make_fetch_fn",
-           "merge_topk", "plan", "plan_per_query", "regroup", "run_route",
-           "sample_ids", "save_layout"]
+           "choose_route", "clause_eval_cost", "dispatch_per_query",
+           "estimate_selectivity", "explain", "extend_layout",
+           "leaf_selectivities", "load_layout", "make_fetch_fn",
+           "merge_topk", "plan", "plan_per_query", "regroup",
+           "reorder_clauses", "run_route", "sample_ids", "save_layout"]

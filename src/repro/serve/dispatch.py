@@ -40,17 +40,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.beam_search import SearchResult
-from ..core.filters import FilterBatch
 from .planner import PerQueryPlan
 
 __all__ = ["dispatch_per_query", "merge_topk", "regroup", "run_route"]
 
 
-def run_route(executor, route: str, queries, filt: FilterBatch, *, k: int,
+def run_route(executor, route: str, queries, filt, *, k: int,
               ls: int, max_iters: int, layout: str = "default",
               dtype: str = "f32") -> SearchResult:
     """Execute one executor route by name with the serving options it takes.
 
+    ``filt`` may be an atomic FilterBatch or a compound FilterExpr — both
+    carry the same lane/take/kind surface, so every route accepts either.
     ``layout``/``dtype`` select the graph route's serving variant; the
     prefilter scan is exact f32 by construction and the postfilter
     traversal runs the default layout, so both ignore them.
@@ -115,7 +116,7 @@ def regroup(parts, groups, batch: int) -> SearchResult:
                           for f in SearchResult._fields))
 
 
-def dispatch_per_query(executor, queries, filt: FilterBatch,
+def dispatch_per_query(executor, queries, filt,
                        pq: PerQueryPlan, *, k: int, ls: int, max_iters: int,
                        layout: str = "default",
                        dtype: str = "f32") -> SearchResult:
@@ -123,7 +124,9 @@ def dispatch_per_query(executor, queries, filt: FilterBatch,
 
     Each group's sub-batch shape keys its own executor compilation, so a
     workload with recurring group sizes reuses the cache like any other
-    batch shape would.
+    batch shape would. Compound expressions slice per group through
+    ``FilterExpr.take`` (every leaf's lanes gathered in lockstep), so a
+    group sees exactly its queries' filter lanes regardless of tree shape.
     """
     q = jnp.asarray(queries)
     if len(pq.groups) == 1:      # no split -> no gather/scatter round-trip

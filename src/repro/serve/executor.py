@@ -44,10 +44,11 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.beam_search import SearchResult, greedy_search
 from ..core.distances import INF, query_key_fn, unfiltered_key_fn
-from ..core.filters import FilterBatch, matches
+from ..core.filters import FilterExpr, matches, n_leaves
 from ..core.ground_truth import exact_filtered_knn
 from ..core.quantized import make_int8_dist_fn, rerank_exact
 from .engine import FusedEngine, make_fetch_fn
@@ -132,7 +133,7 @@ class Executor:
         return tuple(self._cache) if full else tuple(
             k[1:] for k in self._cache)
 
-    def cost_router(self, *, k: int, ls: int):
+    def cost_router(self, *, k: int, ls: int, filt=None):
         """The index's calibrated ``cost.CostModelRouter`` for this search
         shape, or None (-> the planner's static thresholds).
 
@@ -141,7 +142,10 @@ class Executor:
         the constant delta-scan tax (``delta_n``/N rows the streaming
         executor scans+merges on EVERY route) into each prediction. A
         model that doesn't cover all three base routes is treated as
-        absent — partial calibrations never half-route.
+        absent — partial calibrations never half-route. ``filt`` threads
+        the clause count of a compound expression into the prefilter
+        feature vector (log(n_clauses); 1 for atomic filters, which keeps
+        legacy models' predictions unchanged).
         """
         model = getattr(self.index, "cost_model", None)
         if model is None:
@@ -152,9 +156,11 @@ class Executor:
             return None
         idx = self.index
         delta_n = idx.delta.n if hasattr(idx, "delta_arrays") else 0
+        clauses = 1 if filt is None else n_leaves(filt)
         return CostModelRouter(model, n=int(idx.xb.shape[0]),
                                d=int(idx.xb.shape[1]), k=k, ls=ls,
-                               delta_n=delta_n, metric=metric)
+                               delta_n=delta_n, metric=metric,
+                               n_leaves=clauses)
 
     def engine(self, vec_dtype: str = "f32", **kw) -> FusedEngine:
         """FusedEngine over the index's packed layout (metadata + fetch)."""
@@ -166,7 +172,7 @@ class Executor:
         return self._engines[key]
 
     # -- graph route (JAG traversal; Algorithm 2) --------------------------
-    def graph(self, queries, filt: FilterBatch, *, k: int, ls: int,
+    def graph(self, queries, filt, *, k: int, ls: int,
               max_iters: int, layout: str = "default",
               dtype: str = "f32") -> SearchResult:
         if layout not in LAYOUTS:
@@ -251,7 +257,7 @@ class Executor:
                         jnp.asarray(queries), idx.entry)
 
     # -- prefilter route (masked exact scan) -------------------------------
-    def _scan(self, key: Tuple, xb, attr, queries, filt: FilterBatch, *,
+    def _scan(self, key: Tuple, xb, attr, queries, filt, *,
               k: int, block: int, use_kernel: bool,
               offset: int = 0) -> SearchResult:
         """Exact masked scan adapted to the SearchResult contract — the one
@@ -280,16 +286,40 @@ class Executor:
             return run
         return self.run(key, make, xb, attr, jnp.asarray(queries), filt)
 
-    def prefilter(self, queries, filt: FilterBatch, *, k: int,
+    def _reorder_compound(self, filt):
+        """Short-circuit-optimal clause order for a compound expression.
+
+        Probes each leaf's selectivity over the executor's cached sample
+        rows (one compiled probe per tree signature) and asks the planner
+        for the cheapest-most-selective-first order. Host-side and static:
+        the reordered tree is result-identical (connectives commute), it
+        only changes which clauses the scan's short-circuit accounting
+        charges (``GroundTruth.n_feval``). Atomic filters and single-leaf
+        trees pass through untouched.
+        """
+        if not isinstance(filt, FilterExpr) or n_leaves(filt) < 2:
+            return filt
+        from .planner import leaf_selectivities, reorder_clauses
+        ids = self.sample_ids(self.index.attr.n, 1024, 0)
+        key = ("leafsel", "default", "f32", 0, 0, 0, filt.kind,
+               int(ids.shape[0]))
+        sels = self.run(key, lambda: leaf_selectivities,
+                        filt, self.index.attr, ids)
+        return reorder_clauses(filt, np.median(np.asarray(sels), axis=1))
+
+    def prefilter(self, queries, filt, *, k: int,
                   block: int = 4096, use_kernel: bool | None = None
                   ) -> SearchResult:
         """Masked exact scan over the index's (graph-segment) rows.
 
         ``use_kernel`` defaults by backend (the Pallas tile scan on TPU,
         the XLA matmul scan elsewhere), matching the kernels convention.
+        Compound expressions are clause-reordered (cheapest most-selective
+        clause first) before the scan compiles.
         """
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
+        filt = self._reorder_compound(filt)
         idx = self.index
         key = ("prefilter", "default", "f32", k, 0, 0, filt.kind, block,
                use_kernel)
@@ -297,7 +327,7 @@ class Executor:
                           block=block, use_kernel=use_kernel)
 
     # -- delta route (streaming: exact scan over the live delta segment) ---
-    def delta(self, queries, filt: FilterBatch, *, k: int,
+    def delta(self, queries, filt, *, k: int,
               block: int = 4096, use_kernel: bool | None = None
               ) -> SearchResult:
         """Exact masked scan over the index's delta segment, ids offset.
@@ -340,7 +370,7 @@ class Executor:
         return self.run(key, lambda: partial(merge_topk, k=k), base, extra)
 
     # -- postfilter route (oversampled unfiltered beam + filter) -----------
-    def postfilter(self, queries, filt: FilterBatch, *, k: int, ls: int,
+    def postfilter(self, queries, filt, *, k: int, ls: int,
                    max_iters: int) -> SearchResult:
         """Unfiltered traversal keeping the ls-beam, then keep the k best
         filter-passing survivors (the Post-Filtering baseline, fused into

@@ -34,6 +34,15 @@ and the threshold ladder is replaced by an argmin over measured-cost
 predictions per route — the static thresholds remain the exact fallback
 whenever no model is attached or it doesn't cover the base routes.
 
+Compound filters: a FilterExpr tree (core.filters And/Or/Not over the four
+atomic leaves) plans exactly like an atomic filter — the probe samples each
+*leaf* once and composes the per-clause estimates under independence
+(product for AND, inclusion-exclusion 1 - prod(1 - s_i) for OR, complement
+for NOT), so routing — static thresholds or cost-model argmin — stays a
+per-query decision over one composed [B] selectivity vector. The prefilter
+route additionally asks :func:`reorder_clauses` for the short-circuit-
+optimal clause order (cheapest most-selective first) before scanning.
+
 Streaming: both planners probe whatever attribute table they are handed —
 ``StreamingJAGIndex.search_auto`` passes the live base+delta table, so the
 selectivity estimate tracks inserted rows immediately. The probe's device
@@ -49,7 +58,9 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.filters import AttrTable, FilterBatch, matches_sampled
+from ..core.filters import (AttrTable, FilterBatch, FilterExpr, Leaf, And,
+                            Or, Not, _broadcast_rows, describe, matches,
+                            matches_sampled)
 
 ROUTES = ("prefilter", "graph", "postfilter")
 
@@ -145,15 +156,129 @@ def sample_ids(n: int, n_samples: int, seed: int = 0) -> jnp.ndarray:
     return jnp.asarray(rng.choice(n, n_samples, replace=False), jnp.int32)
 
 
-def estimate_selectivity(filt: FilterBatch, table: AttrTable,
+def _compose_selectivity(filt, leaf_sel):
+    """Combine per-leaf sampled selectivities over an expression tree.
+
+    Under clause independence: And multiplies (product is <= every
+    clause), Or composes by inclusion-exclusion — 1 - prod(1 - s_i) —
+    which is >= every clause and capped at 1 by construction, Not
+    complements. ``leaf_sel`` maps a FilterBatch to its f32[B] estimate.
+    """
+    if isinstance(filt, FilterBatch):
+        return leaf_sel(filt)
+    if isinstance(filt, Leaf):
+        return _compose_selectivity(filt.filt, leaf_sel)
+    if isinstance(filt, Not):
+        return 1.0 - _compose_selectivity(filt.child, leaf_sel)
+    if isinstance(filt, And):
+        out = _compose_selectivity(filt.children[0], leaf_sel)
+        for c in filt.children[1:]:
+            out = out * _compose_selectivity(c, leaf_sel)
+        return out
+    if isinstance(filt, Or):
+        miss = 1.0 - _compose_selectivity(filt.children[0], leaf_sel)
+        for c in filt.children[1:]:
+            miss = miss * (1.0 - _compose_selectivity(c, leaf_sel))
+        return 1.0 - miss
+    raise TypeError(f"not a filter: {type(filt)!r}")
+
+
+def estimate_selectivity(filt, table: AttrTable,
                          ids: jnp.ndarray) -> jnp.ndarray:
     """Per-query selectivity estimate f32[B] from a sampled matches() probe.
 
     Pure jnp on registered pytrees, so it traces under ``jax.jit`` for every
-    filter kind; the executor caches one compilation per (kind, |sample|).
+    filter kind; the executor caches one compilation per (kind, |sample|) —
+    an expression's structural ``kind`` signature keys compound probes the
+    same way. Compound estimates compose the per-leaf sampled estimates
+    (product / inclusion-exclusion / complement), clipped to [0, 1].
     """
-    ok = matches_sampled(filt, table, ids)
-    return jnp.mean(ok.astype(jnp.float32), axis=-1)
+    if isinstance(filt, FilterBatch):
+        ok = matches_sampled(filt, table, ids)
+        return jnp.mean(ok.astype(jnp.float32), axis=-1)
+    attrs = _broadcast_rows(table, jnp.asarray(ids, jnp.int32))
+
+    def leaf_sel(f):
+        return jnp.mean(matches(f, attrs).astype(jnp.float32), axis=-1)
+
+    return jnp.clip(_compose_selectivity(filt, leaf_sel), 0.0, 1.0)
+
+
+def leaf_selectivities(filt, table: AttrTable,
+                       ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-leaf sampled selectivities f32[L, B], leaves in DFS order.
+
+    The clause reorderer's probe: one gather of the sample rows feeds
+    every leaf's matches() mean.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    attrs = _broadcast_rows(table, ids)
+    leaves = filt.leaves() if isinstance(filt, FilterExpr) else [filt]
+    return jnp.stack(
+        [jnp.mean(matches(f, attrs).astype(jnp.float32), axis=-1)
+         for f in leaves])
+
+
+def _rank_and(sel: float, cost: float) -> float:
+    # classic predicate ordering: cost per unit of filtering power;
+    # for unit costs this is ascending selectivity
+    return cost / max(1.0 - sel, 1e-9)
+
+
+def _rank_or(sel: float, cost: float) -> float:
+    return cost / max(sel, 1e-9)
+
+
+def _order_clauses(filt, leaf_iter, reorder: bool):
+    """Recursive (expr, composed_sel, expected_evals_per_point)."""
+    if isinstance(filt, FilterBatch):
+        return filt, float(next(leaf_iter)), 1.0
+    if isinstance(filt, Leaf):
+        f, s, c = _order_clauses(filt.filt, leaf_iter, reorder)
+        return Leaf(f), s, c
+    if isinstance(filt, Not):
+        ch, s, c = _order_clauses(filt.child, leaf_iter, reorder)
+        return Not(ch), 1.0 - s, c
+    if isinstance(filt, (And, Or)):
+        kids = [_order_clauses(c, leaf_iter, reorder)
+                for c in filt.children]
+        is_and = isinstance(filt, And)
+        if reorder:
+            # stable sort: ties keep the written clause order
+            kids.sort(key=lambda t: (_rank_and if is_and else _rank_or)(
+                t[1], t[2]))
+        live, cost = 1.0, 0.0
+        for _, s, c in kids:
+            cost += live * c
+            live *= s if is_and else (1.0 - s)
+        sel = live if is_and else 1.0 - live
+        node = (And if is_and else Or)(*[k[0] for k in kids])
+        return node, sel, cost
+    raise TypeError(f"not a filter: {type(filt)!r}")
+
+
+def reorder_clauses(filt, leaf_sels):
+    """Short-circuit-optimal clause order, cheapest-most-selective first.
+
+    ``leaf_sels``: one scalar selectivity per leaf in DFS order (e.g. the
+    medians of :func:`leaf_selectivities`). And children sort ascending by
+    cost/(1-sel) (kill cheap and early), Or children ascending by cost/sel
+    (accept cheap and early); subtree costs are expected short-circuit
+    evals per point, so nesting composes. Boolean connectives commute, so
+    the reordered tree is result-identical — only ``n_feval`` changes.
+    Atomic filters pass through unchanged.
+    """
+    if not isinstance(filt, FilterExpr):
+        return filt
+    return _order_clauses(filt, iter([float(s) for s in leaf_sels]),
+                          True)[0]
+
+
+def clause_eval_cost(filt, leaf_sels) -> float:
+    """Expected short-circuit leaf evals per scanned point, given the
+    tree's CURRENT clause order and per-leaf selectivities (DFS order)."""
+    return _order_clauses(filt, iter([float(s) for s in leaf_sels]),
+                          False)[2]
 
 
 def choose_route(sel: float, cfg: PlannerConfig) -> str:
@@ -174,7 +299,7 @@ def _route_of(sel: float, cfg: PlannerConfig, router) -> str:
                                                                      cfg)
 
 
-def _estimate(filt: FilterBatch, table: AttrTable, cfg: PlannerConfig,
+def _estimate(filt, table: AttrTable, cfg: PlannerConfig,
               executor) -> Tuple[np.ndarray, int]:
     """Shared probe: host f32[B] estimates + the probe size used."""
     if executor is not None:
@@ -191,7 +316,7 @@ def _estimate(filt: FilterBatch, table: AttrTable, cfg: PlannerConfig,
     return np.asarray(est, np.float32), n_sampled
 
 
-def plan(filt: FilterBatch, table: AttrTable,
+def plan(filt, table: AttrTable,
          cfg: PlannerConfig = PlannerConfig(),
          executor=None, router=None) -> Plan:
     """Estimate the batch's selectivity and pick ONE route for all queries.
@@ -212,7 +337,7 @@ def plan(filt: FilterBatch, table: AttrTable,
                 router.costs(batch_sel), router.metric)
 
 
-def plan_per_query(filt: FilterBatch, table: AttrTable,
+def plan_per_query(filt, table: AttrTable,
                    cfg: PlannerConfig = PlannerConfig(),
                    executor=None, router=None) -> PerQueryPlan:
     """Band the per-query selectivity vector into route groups.
@@ -239,9 +364,15 @@ def plan_per_query(filt: FilterBatch, table: AttrTable,
                         router.costs(batch_sel), router.metric)
 
 
-def explain(p, cfg: PlannerConfig = PlannerConfig()) -> str:
-    """One-line human-readable routing rationale (benchmarks / logs)."""
+def explain(p, cfg: PlannerConfig = PlannerConfig(), filt=None) -> str:
+    """One-line human-readable routing rationale (benchmarks / logs).
+
+    Pass the planned ``filt`` to prepend the filter expression, e.g.
+    ``filter=(label=3 & range[0,0.5])``.
+    """
     head = f"route={p.route} sel~{p.batch_selectivity:.4f}"
+    if filt is not None:
+        head = f"filter={describe(filt)} {head}"
     if isinstance(p, PerQueryPlan):
         split = " ".join(f"{g.route}:{g.ids.size}" for g in p.groups)
         head += f" [{split}]"

@@ -40,7 +40,7 @@ import numpy as np
 from ..core.beam_search import SearchResult
 from ..core.build import finalize_graph, make_insert_step
 from ..core.distances import sq_norms
-from ..core.filters import AttrTable, FilterBatch
+from ..core.filters import AttrTable, as_filter
 from ..core.jag import JAGConfig, JAGIndex
 from .delta import DeltaSegment
 
@@ -297,7 +297,7 @@ class StreamingJAGIndex:
 
     # -- queries (base route + delta scan, merged exactly) -----------------
     def _with_delta(self, base_res: SearchResult, queries,
-                    filt: FilterBatch, k: int) -> SearchResult:
+                    filt, k: int) -> SearchResult:
         if self.delta.n == 0:
             return base_res
         self._last_k = int(k)
@@ -307,23 +307,29 @@ class StreamingJAGIndex:
         extra = self.executor.delta(queries, filt, k=k)
         return self.executor.merge(base_res, extra, k=k)
 
-    def search(self, queries, filt: FilterBatch, k: int = 10, ls: int = 64,
+    def search(self, queries, filt, k: int = 10, ls: int = 64,
                max_iters: int = 0, layout: str = "default") -> SearchResult:
-        """JAG traversal over the graph segment + exact delta scan, merged."""
+        """JAG traversal over the graph segment + exact delta scan, merged.
+
+        ``filt`` may be a filter expression or a raw FilterBatch; it is
+        normalized ONCE here so the base traversal and the delta scan see
+        the same object (one jit cache entry each)."""
+        filt = as_filter(filt)
         base = JAGIndex.search(self, queries, filt, k=k, ls=ls,
                                max_iters=max_iters, layout=layout)
         return self._with_delta(base, queries, filt, k)
 
-    def search_int8(self, queries, filt: FilterBatch, k: int = 10,
+    def search_int8(self, queries, filt, k: int = 10,
                     ls: int = 64, max_iters: int = 0,
                     layout: str = "default") -> SearchResult:
         """int8 traversal + exact re-rank on the graph segment, merged with
         the (always full-precision) delta scan."""
+        filt = as_filter(filt)
         base = JAGIndex.search_int8(self, queries, filt, k=k, ls=ls,
                                     max_iters=max_iters, layout=layout)
         return self._with_delta(base, queries, filt, k)
 
-    def search_auto(self, queries, filt: FilterBatch, k: int = 10,
+    def search_auto(self, queries, filt, k: int = 10,
                     ls: int = 64, max_iters: int = 0,
                     planner=None, return_plan: bool = False,
                     mode: str = "per_query", layout: str = "default",
@@ -338,6 +344,7 @@ class StreamingJAGIndex:
         it is a constant (and compaction-bounded) cost that every route
         shares, so routing decisions are unchanged by the delta.
         """
+        filt = as_filter(filt)
         base, p = JAGIndex.search_auto(
             self, queries, filt, k=k, ls=ls, max_iters=max_iters,
             planner=planner, return_plan=True, mode=mode, layout=layout,

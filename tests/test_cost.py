@@ -31,7 +31,7 @@ CFG = JAGConfig(degree=16, ls_build=32, batch_size=128, cand_pool=64,
 # model: fit/predict round-trip, coverage semantics, router argmin
 # ---------------------------------------------------------------------------
 
-W_TRUE = {"prefilter": [2.0, 0.5, 0.1], "graph": [1.0, 0.8, -0.3, 0.2],
+W_TRUE = {"prefilter": [2.0, 0.5, 0.1, 0.3], "graph": [1.0, 0.8, -0.3, 0.2],
           "postfilter": [1.5, 0.7, 0.1, 0.05], "delta": [0.5, 0.9],
           "merge": [0.2, 0.3], "compact": [3.0, 1.0]}
 
@@ -46,7 +46,8 @@ def _synthetic_obs(n_per_route=24, seed=0):
                      n=int(rng.integers(500, 50000)),
                      d=int(rng.integers(8, 128)),
                      ls=int(rng.choice([32, 64, 128])), k=10,
-                     delta_n=int(rng.integers(10, 1000)))
+                     delta_n=int(rng.integers(10, 1000)),
+                     n_clauses=int(rng.integers(1, 5)))
             us = float(np.exp(phi(route, f) @ np.asarray(w)))
             obs.append(Observation(route, f, us=us, n_dist=2.0 * us))
     return obs
@@ -87,6 +88,68 @@ def test_predictions_always_positive():
             c = model.predict(route, dict(sel=sel, n=10, d=4, ls=8, k=2,
                                           delta_n=0))
             assert c > 0.0, (route, sel, c)
+
+
+def test_legacy_prefilter_coefs_zero_pad_bit_identically():
+    """A 3-coefficient prefilter model (fitted before the log(n_clauses)
+    term existed) predicts exactly what it always predicted, at every
+    clause count — the append-only term policy."""
+    legacy = CostModel(coef={"prefilter": {"us": [2.0, 0.5, 0.1]}},
+                       meta={"backend": "old"})
+    f = dict(sel=0.05, n=5000, d=32, ls=64, k=10)
+    want = float(np.exp(phi("prefilter", f)[:3] @ np.asarray([2.0, 0.5,
+                                                              0.1])))
+    for nc in (1, 2, 7):
+        got = legacy.predict("prefilter", dict(f, n_clauses=nc))
+        assert got == want > 0.0, nc
+    # the reverse direction is a hard error, not silent truncation
+    future = CostModel(coef={"merge": {"us": [0.1, 0.2, 0.3, 0.4, 0.5]}},
+                       meta={})
+    with pytest.raises(ValueError, match="newer"):
+        future.predict("merge", f)
+
+
+def test_fit_recovers_n_clauses_coefficient_and_monotone_cost():
+    """The fitted prefilter law recovers W_TRUE's positive n_clauses slope,
+    so predicted prefilter cost grows with clause count."""
+    model = fit(_synthetic_obs())
+    w = model.coef["prefilter"]["us"]
+    assert len(w) == 4 and math.isclose(w[3], 0.3, rel_tol=1e-6)
+    f = dict(sel=0.05, n=5000, d=32, ls=64, k=10)
+    costs = [model.predict("prefilter", dict(f, n_clauses=nc))
+             for nc in (1, 2, 4, 8)]
+    assert all(a < b for a, b in zip(costs, costs[1:])), costs
+
+
+def test_fit_ignores_identically_zero_term_columns():
+    """All-atomic calibration grids (n_clauses=1 everywhere -> a zero
+    log(n_clauses) column) still fit prefilter: a structurally absent term
+    costs no degree of freedom and its coefficient pins at exactly 0."""
+    rng = np.random.default_rng(2)
+    obs = []
+    for _ in range(3):      # 3 obs < 4 coefficients, but only 3 live terms
+        f = dict(sel=float(rng.uniform(0.01, 1.0)),
+                 n=int(rng.integers(500, 50000)),
+                 d=int(rng.integers(8, 128)), n_clauses=1)
+        us = float(np.exp(phi("prefilter", f)
+                          @ np.asarray(W_TRUE["prefilter"])))
+        obs.append(Observation("prefilter", f, us=us))
+    model = fit(obs)
+    assert model.covers(("prefilter",))
+    assert model.coef["prefilter"]["us"][3] == 0.0
+
+
+def test_router_n_leaves_feeds_prefilter_prediction():
+    model = fit(_synthetic_obs())
+    r1 = CostModelRouter(model, n=5000, d=32, k=10, ls=64)
+    r3 = CostModelRouter(model, n=5000, d=32, k=10, ls=64, n_leaves=3)
+    assert r1.features(0.1)["n_clauses"] == 1
+    assert r3.features(0.1)["n_clauses"] == 3
+    for sel in (0.01, 0.5):
+        assert r3.costs(sel)["prefilter"] > r1.costs(sel)["prefilter"]
+        # graph/postfilter have no clause term: identical predictions
+        assert r3.costs(sel)["graph"] == r1.costs(sel)["graph"]
+        assert r3.costs(sel)["postfilter"] == r1.costs(sel)["postfilter"]
 
 
 def test_router_picks_argmin_and_folds_delta_tax():

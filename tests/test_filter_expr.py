@@ -1,0 +1,411 @@
+"""Compound filter expression trees: the public And/Or/Not filter surface.
+
+Covers: (1) the operator algebra — ``&``/``|``/``~`` build flattened trees
+with structural ``kind`` signatures, double negation cancels, raw
+FilterBatch operands coerce; (2) ``as_filter`` normalization — a
+single-leaf expression IS its atomic FilterBatch (same results, same
+executor cache key, zero new compilations); (3) compound ``search_auto``
+bit-identity with the ``exact_filtered_knn`` oracle on every forced route
+and through the streaming delta merge; (4) planner selectivity composition
+(product / inclusion-exclusion / complement) and clause reordering
+(result-identical, strictly fewer short-circuit evals with the rare clause
+first); (5) the deprecation shim, ``explain(filt=)``, and ``joint_table``
+validation.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import filters as F
+from repro.core.filters import (And, FilterBatch, Label, Leaf, Not, Or,
+                                Range, as_filter, describe, joint_table,
+                                n_leaves)
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.serve.planner import (PlannerConfig, clause_eval_cost,
+                                 estimate_selectivity, explain,
+                                 leaf_selectivities, plan, plan_per_query,
+                                 reorder_clauses)
+from repro.stream import StreamingJAGIndex
+
+N, D, B = 400, 8, 8
+LS = 256          # parity beam: graph/postfilter saturate the tiny index
+CFG = JAGConfig(degree=12, ls_build=24, batch_size=128, cand_pool=48,
+                calib_samples=32, n_seeds=6)
+
+# threshold configs that force ONE route everywhere (the planner refuses
+# inverted ladders, so "force graph" narrows both thresholds outward)
+FORCE = {"prefilter": PlannerConfig(prefilter_max_sel=1.1,
+                                    postfilter_min_sel=1.2),
+         "graph": PlannerConfig(prefilter_max_sel=0.0,
+                                postfilter_min_sel=1.1),
+         "postfilter": PlannerConfig(prefilter_max_sel=0.0,
+                                     postfilter_min_sel=1e-9)}
+
+_STATE = {}
+
+
+def _setup():
+    """One label+range composite index + queries, shared per session."""
+    if "idx" not in _STATE:
+        rng = np.random.default_rng(5)
+        xb = rng.normal(size=(N, D)).astype(np.float32)
+        labels = rng.integers(0, 4, N).astype(np.int32)
+        labels[: N // 50] = 9                       # rare label, sel ~0.02
+        vals = rng.uniform(0, 1, N).astype(np.float32)
+        tab = joint_table(F.label_table(labels), F.range_table(vals))
+        idx = JAGIndex.build(xb, tab, CFG)
+        q = (xb[rng.integers(0, N, B)]
+             + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+        _STATE["idx"] = (idx, q, labels, vals)
+    return _STATE["idx"]
+
+
+def _np_valid(expr, labels, vals):
+    """Numpy reference validity [B, N] for label/range trees."""
+    if isinstance(expr, Leaf):
+        return _np_valid(expr.filt, labels, vals)
+    if isinstance(expr, And):
+        out = _np_valid(expr.children[0], labels, vals)
+        for c in expr.children[1:]:
+            out = out & _np_valid(c, labels, vals)
+        return out
+    if isinstance(expr, Or):
+        out = _np_valid(expr.children[0], labels, vals)
+        for c in expr.children[1:]:
+            out = out | _np_valid(c, labels, vals)
+        return out
+    if isinstance(expr, Not):
+        return ~_np_valid(expr.child, labels, vals)
+    if expr.kind == F.LABEL:
+        return labels[None, :] == np.asarray(expr.data["label"])[:, None]
+    lo = np.asarray(expr.data["lo"])[:, None]
+    hi = np.asarray(expr.data["hi"])[:, None]
+    return (vals[None, :] >= lo) & (vals[None, :] <= hi)
+
+
+# ---------------------------------------------------------------------------
+# operator algebra, signatures, normalization
+# ---------------------------------------------------------------------------
+
+def test_operators_build_flattened_trees_with_structural_kinds():
+    a, b, c = Label(1), Range(0.0, 0.5), Label(2)
+    expr = a & b & c
+    assert isinstance(expr, And) and len(expr.children) == 3
+    assert expr.kind == "(label&range&label)"
+    assert n_leaves(expr) == 3 and expr.batch == 1
+    either = a | b
+    assert isinstance(either, Or) and either.kind == "(label|range)"
+    neg = ~a
+    assert isinstance(neg, Not) and neg.kind == "~label"
+    assert ~neg is a                       # double negation cancels
+    mixed = (a & b) | ~c
+    assert mixed.kind == "((label&range)|~label)"
+    assert repr(mixed) == f"FilterExpr<{describe(mixed)}>"
+    assert describe(a & b) == "(label=1 & range[0,0.5])"
+    # raw FilterBatch operands coerce on either side
+    raw = F.range_filters(np.zeros(1), np.ones(1))
+    assert (raw & a).kind == "(range&label)" and isinstance(raw & a, And)
+    assert (a | raw).kind == "(label|range)"
+    with pytest.raises(ValueError, match=">= 2"):
+        And(a)
+    with pytest.raises(TypeError):
+        a & 3
+
+
+def test_as_filter_normalizes_single_leaf_to_its_batch():
+    leaf = Range(0.1, 0.9)
+    got = as_filter(leaf)
+    assert isinstance(got, FilterBatch) and got is leaf.filt
+    raw = F.label_filters(np.zeros(3, np.int32))
+    assert as_filter(raw) is raw
+    tree = leaf & Label(0)
+    assert as_filter(tree) is tree         # compound passes through
+    with pytest.raises(TypeError):
+        as_filter("label")
+    assert n_leaves(raw) == 1 and n_leaves(tree) == 2
+
+
+def test_lane_and_take_slice_every_leaf_in_lockstep():
+    expr = Label(np.arange(6)) & Range(np.linspace(0, 1, 6), np.ones(6))
+    sub = expr.take(np.asarray([4, 1], np.int32))
+    assert isinstance(sub, And) and sub.batch == 2
+    l0, l1 = sub.leaves()
+    np.testing.assert_array_equal(np.asarray(l0.data["label"]), [4, 1])
+    np.testing.assert_allclose(np.asarray(l1.data["lo"]),
+                               [0.8, 0.2], atol=1e-6)
+    one = expr.lane(3)
+    assert one.batch == 1
+    assert int(one.leaves()[0].data["label"][0]) == 3
+
+
+def test_deprecated_filter_batch_constructor_warns():
+    with pytest.warns(DeprecationWarning, match="Label/Range"):
+        fb = F.filter_batch(F.LABEL, {"label": np.zeros(2, np.int32)})
+    assert isinstance(fb, FilterBatch) and fb.kind == F.LABEL
+    # the expression constructors stay warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        Label(1) & Range(0, 1)
+
+
+def test_joint_table_validation():
+    lab = F.label_table(np.zeros(5, np.int32))
+    rng_t = F.range_table(np.zeros(5, np.float32))
+    t = joint_table(lab, rng_t)
+    assert t.kind == "label+range" and t.n == 5
+    assert set(t.data) == {"label", "value"}
+    with pytest.raises(ValueError, match=">= 2"):
+        joint_table(lab)
+    with pytest.raises(ValueError, match="duplicate"):
+        joint_table(lab, F.label_table(np.ones(5, np.int32)))
+    with pytest.raises(ValueError, match="atomic"):
+        joint_table(t, F.subset_table(np.zeros((5, 8), bool), 8))
+    with pytest.raises(ValueError, match="row counts"):
+        joint_table(lab, F.range_table(np.zeros(4, np.float32)))
+    sub8 = F.subset_table(np.zeros((5, 8), bool), 8)
+    boo4 = F.boolean_table(np.zeros(5, np.uint32), 4)
+    with pytest.raises(ValueError, match="n_bits"):
+        joint_table(sub8, boo4)
+    with pytest.raises(ValueError, match="bit_weights"):
+        joint_table(lab, F.subset_table(np.zeros((5, 8), bool), 8,
+                                        bit_weights=np.ones(8)))
+
+
+# ---------------------------------------------------------------------------
+# matches / selectivity composition
+# ---------------------------------------------------------------------------
+
+def test_compound_matches_equals_numpy_composition():
+    idx, _, labels, vals = _setup()
+    lo = np.linspace(0, 0.5, B).astype(np.float32)
+    exprs = [
+        Label(np.full(B, 9)) & Range(lo, lo + 0.4),
+        Label(np.full(B, 1)) | Label(np.full(B, 2)),
+        ~Range(lo, np.ones(B, np.float32)),
+        (Label(np.full(B, 9)) | ~Range(np.zeros(B, np.float32), lo))
+        & Range(np.zeros(B, np.float32), np.full(B, 0.9, np.float32)),
+    ]
+    for expr in exprs:
+        got = np.asarray(F.matches_all(expr, idx.attr))
+        np.testing.assert_array_equal(got, _np_valid(expr, labels, vals),
+                                      err_msg=expr.kind)
+
+
+def test_estimate_selectivity_composes_and_bounds():
+    idx, _, labels, vals = _setup()
+    ids = np.arange(N, dtype=np.int32)        # exact probe
+    a = Label(np.full(B, 2))
+    b = Range(np.zeros(B, np.float32), np.full(B, 0.3, np.float32))
+    sa = np.asarray(estimate_selectivity(as_filter(a), idx.attr, ids))
+    sb = np.asarray(estimate_selectivity(as_filter(b), idx.attr, ids))
+    s_and = np.asarray(estimate_selectivity(a & b, idx.attr, ids))
+    s_or = np.asarray(estimate_selectivity(a | b, idx.attr, ids))
+    s_not = np.asarray(estimate_selectivity(~a, idx.attr, ids))
+    np.testing.assert_allclose(s_and, sa * sb, atol=1e-6)
+    np.testing.assert_allclose(s_or, 1 - (1 - sa) * (1 - sb), atol=1e-6)
+    np.testing.assert_allclose(s_not, 1 - sa, atol=1e-6)
+    for s in (s_and, s_or, s_not):
+        assert (s >= 0).all() and (s <= 1).all()
+    assert (s_and <= np.minimum(sa, sb) + 1e-6).all()
+    assert (s_or >= np.maximum(sa, sb) - 1e-6).all()
+    # leaf probe: DFS order, [L, B]
+    ls = np.asarray(leaf_selectivities(a & b, idx.attr, ids))
+    assert ls.shape == (2, B)
+    np.testing.assert_allclose(ls[0], sa, atol=1e-6)
+    np.testing.assert_allclose(ls[1], sb, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: single-leaf bit-identity, compound oracle identity per route
+# ---------------------------------------------------------------------------
+
+def test_single_leaf_expression_bit_identical_to_atomic_path():
+    idx, q, _, vals = _setup()
+    lo = np.zeros(B, np.float32)
+    hi = np.full(B, 0.6, np.float32)
+    raw = F.range_filters(lo, hi)
+    before = set(idx.executor.cache_keys())
+    want = idx.search(q, raw, k=10, ls=48)
+    mid = set(idx.executor.cache_keys())
+    got = idx.search(q, Range(lo, hi), k=10, ls=48)
+    after = set(idx.executor.cache_keys())
+    for f in want._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f)
+    # the leaf ran THROUGH the atomic compilation: no new cache entries
+    assert mid - before and after == mid
+
+
+def _oracle(idx, q, expr, k=10):
+    return exact_filtered_knn(idx.xb, idx.attr, q, expr, k=k)
+
+
+@pytest.mark.parametrize("route", ["prefilter", "graph", "postfilter"])
+def test_compound_search_auto_matches_oracle_on_every_route(route):
+    idx, q, _, _ = _setup()
+    lo = np.zeros(B, np.float32)
+    # band the composed selectivity so each forced route can saturate:
+    # postfilter needs a wide filter, prefilter/graph take the rare mix
+    if route == "postfilter":
+        expr = (Range(lo, np.full(B, 0.95, np.float32))
+                | Label(np.full(B, 9)))
+    else:
+        expr = (Label(np.full(B, 9)) | Label(np.full(B, 1))) \
+            & Range(lo, np.full(B, 0.7, np.float32))
+    res, p = idx.search_auto(q, expr, k=10, ls=LS, planner=FORCE[route],
+                             return_plan=True, mode="batch")
+    assert p.route == route
+    gt = _oracle(idx, q, expr)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(gt.ids),
+                                  err_msg=route)
+    if route == "prefilter":
+        np.testing.assert_array_equal(np.asarray(res.secondary),
+                                      np.asarray(gt.d2))
+
+
+def test_compound_per_query_dispatch_bit_identical_to_solo_routes():
+    from repro.serve.dispatch import run_route
+    idx, q, _, _ = _setup()
+    # mixed lanes: half rare-AND (prefilter band), half wide (post band)
+    hi = np.where(np.arange(B) % 2 == 0, 0.02, 0.95).astype(np.float32)
+    expr = Range(np.zeros(B, np.float32), hi) & ~Label(np.full(B, 3))
+    res, p = idx.search_auto(q, expr, k=10, ls=48, return_plan=True)
+    assert len(p.groups) >= 2              # the batch really split
+    for i in range(B):
+        solo = run_route(idx.executor, p.routes[i], q[i:i + 1],
+                         expr.take(np.asarray([i], np.int32)), k=10,
+                         ls=48, max_iters=96)
+        for f in ("ids", "primary", "secondary", "n_dist"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res, f))[i],
+                np.asarray(getattr(solo, f))[0],
+                err_msg=(f, i, p.routes[i]))
+
+
+def test_streaming_delta_merge_compound_matches_oracle():
+    idx, q, labels, vals = _setup()
+    rng = np.random.default_rng(13)
+    s = StreamingJAGIndex(idx, compact_frac=0.9)
+    m = 60
+    xv = rng.normal(size=(m, D)).astype(np.float32)
+    dl = rng.integers(0, 4, m).astype(np.int32)
+    dv = rng.uniform(0, 1, m).astype(np.float32)
+    s.insert(xv, joint_table(F.label_table(dl), F.range_table(dv)),
+             auto_compact=False)
+    assert s.delta.n == m
+    expr = (Label(np.full(B, 9)) | Label(np.full(B, 2))) \
+        & Range(np.zeros(B, np.float32), np.full(B, 0.8, np.float32))
+    res = s.search_auto(q, expr, k=10, ls=LS, planner=FORCE["prefilter"])
+    xb_all = np.concatenate([np.asarray(idx.xb), xv], axis=0)
+    gt = exact_filtered_knn(xb_all, s.attr, q, expr, k=10)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(gt.ids))
+    np.testing.assert_array_equal(np.asarray(res.secondary),
+                                  np.asarray(gt.d2))
+
+
+# ---------------------------------------------------------------------------
+# clause reordering: result-identical, strictly fewer short-circuit evals
+# ---------------------------------------------------------------------------
+
+def test_reorder_clauses_puts_rare_clause_first_and_cuts_evals():
+    idx, q, labels, vals = _setup()
+    wide = Range(np.zeros(B, np.float32), np.full(B, 0.9, np.float32))
+    rare = Label(np.full(B, 9))
+    fixed = wide & rare                    # deliberately worst order
+    ids = np.arange(N, dtype=np.int32)
+    sels = np.median(np.asarray(leaf_selectivities(fixed, idx.attr, ids)),
+                     axis=1)
+    better = reorder_clauses(fixed, sels)
+    assert better.kind == "(label&range)"  # rare clause moved first
+    assert clause_eval_cost(better, [sels[1], sels[0]]) \
+        < clause_eval_cost(fixed, sels)
+    gt_fixed = exact_filtered_knn(idx.xb, idx.attr, q, fixed, k=10)
+    gt_best = exact_filtered_knn(idx.xb, idx.attr, q, better, k=10)
+    np.testing.assert_array_equal(np.asarray(gt_fixed.ids),
+                                  np.asarray(gt_best.ids))
+    np.testing.assert_array_equal(np.asarray(gt_fixed.d2),
+                                  np.asarray(gt_best.d2))
+    assert (np.asarray(gt_best.n_feval)
+            < np.asarray(gt_fixed.n_feval)).all()
+    # atomic filters pass through untouched
+    assert reorder_clauses(as_filter(rare), sels[:1]) is as_filter(rare)
+
+
+def test_executor_prefilter_reorders_compound_automatically():
+    idx, q, _, _ = _setup()
+    wide = Range(np.zeros(B, np.float32), np.full(B, 0.9, np.float32))
+    rare = Label(np.full(B, 9))
+    got = idx.executor.prefilter(q, wide & rare, k=10)
+    want = idx.executor.prefilter(q, rare & wide, k=10)
+    for f in ("ids", "primary", "secondary"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f)
+    # both spellings reorder to the same canonical tree -> ONE scan
+    # compilation for the pair (plus the shared leaf-selectivity probe)
+    keys = [k for k in idx.executor.cache_keys() if k[0] == "prefilter"
+            and str(k[6]) in ("(label&range)", "(range&label)")]
+    assert {str(k[6]) for k in keys} == {"(label&range)"}
+    assert any(k[0] == "leafsel" for k in idx.executor.cache_keys())
+
+
+def test_or_reorder_puts_common_clause_first():
+    # Or accepts cheap-and-likely first: cost/sel ascending
+    sels = [0.02, 0.9]
+    rare_first = Label(np.full(B, 9)) | Range(np.zeros(B, np.float32),
+                                              np.full(B, 0.9, np.float32))
+    best = reorder_clauses(rare_first, sels)
+    assert best.kind == "(range|label)"
+    assert clause_eval_cost(best, [0.9, 0.02]) \
+        < clause_eval_cost(rare_first, sels)
+
+
+# ---------------------------------------------------------------------------
+# plumbing: explain, plans, cost-router clause count
+# ---------------------------------------------------------------------------
+
+def test_explain_prints_the_expression():
+    idx, q, _, _ = _setup()
+    expr = Label(np.full(B, 9)) & Range(np.zeros(B, np.float32),
+                                        np.full(B, 0.5, np.float32))
+    p = plan(expr, idx.attr, PlannerConfig())
+    line = explain(p, PlannerConfig(), filt=expr)
+    assert "filter=(label=9 & range[0,0.5])" in line
+    assert f"route={p.route}" in line
+    pq = plan_per_query(expr, idx.attr, PlannerConfig())
+    assert "filter=" in explain(pq, PlannerConfig(), filt=expr)
+
+
+def test_search_auto_compound_threads_clause_count_to_router():
+    idx, q, _, _ = _setup()
+    expr = Label(np.full(B, 2)) & Range(np.zeros(B, np.float32),
+                                        np.full(B, 0.5, np.float32))
+    r = idx.executor.cost_router(k=10, ls=48, filt=expr)
+    assert r is None                       # no model attached here
+    # but the clause count plumbs through when a model exists
+    from repro.cost import fit, Observation, phi
+    rng = np.random.default_rng(0)
+    obs = []
+    for route, w in (("prefilter", [2.0, 0.5, 0.1, 0.3]),
+                     ("graph", [1.0, 0.8, -0.3, 0.2]),
+                     ("postfilter", [1.5, 0.7, 0.1, 0.05])):
+        for _ in range(12):
+            f = dict(sel=float(rng.uniform(0.01, 1.0)),
+                     n=int(rng.integers(500, 50000)),
+                     d=int(rng.integers(8, 128)),
+                     ls=int(rng.choice([32, 64])), k=10,
+                     n_clauses=int(rng.integers(1, 5)))
+            obs.append(Observation(route, f,
+                                   us=float(np.exp(phi(route, f)
+                                                   @ np.asarray(w)))))
+    try:
+        idx.attach_cost_model(fit(obs, dict(backend="cpu")))
+        r2 = idx.executor.cost_router(k=10, ls=48, filt=expr)
+        assert r2 is not None and r2.n_leaves == 2
+        r1 = idx.executor.cost_router(k=10, ls=48)
+        assert r1.n_leaves == 1
+    finally:
+        idx.attach_cost_model(None)

@@ -92,6 +92,77 @@ def test_bitset_raw_grid():
                                   np.asarray(ref.hamming_ref(a, b)))
 
 
+def _np_popcount_words(w):
+    """Independent numpy popcount reference: bytes -> unpackbits -> sum."""
+    w = np.asarray(w, np.uint32)
+    by = w.view(np.uint8).reshape(w.shape + (4,))
+    return np.unpackbits(by, axis=-1).sum(axis=(-1, -2)).astype(np.int32)
+
+
+@pytest.mark.parametrize("B,N,W", [(3, 5, 1), (130, 257, 3)])
+def test_bitset_matches_numpy_popcount(B, N, W):
+    """xor/deficit vs a from-scratch numpy unpackbits oracle (the jnp ref
+    shares population_count with the kernel; this one shares nothing),
+    including shapes that exercise the 128-row padding path."""
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 2 ** 32, (B, W), dtype=np.uint64).astype(np.uint32)
+    b = rng.integers(0, 2 ** 32, (N, W), dtype=np.uint64).astype(np.uint32)
+    want_xor = _np_popcount_words(a[:, None, :] ^ b[None, :, :])
+    want_def = _np_popcount_words(a[:, None, :] & ~b[None, :, :])
+    got_xor = ops.hamming(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    got_def = ops.subset_deficit(jnp.asarray(a), jnp.asarray(b),
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_xor), want_xor)
+    np.testing.assert_array_equal(np.asarray(got_def), want_def)
+
+
+@pytest.mark.parametrize("kind", ["subset", "boolean", "compound"])
+def test_prefilter_scan_kernel_validity_bit_identical(kind):
+    """exact_filtered_knn with use_kernel=True routes subset/boolean leaf
+    validity through the bitset kernel — results (ids, d2, n_dist, n_feval)
+    must be bit-identical to the dense comparator path."""
+    from repro.core import filters as F
+    from repro.core.filters import Boolean, Subset
+    from repro.core.ground_truth import exact_filtered_knn
+    rng = np.random.default_rng(8)
+    N, d, B, L = 300, 16, 6, 24
+    xb = rng.normal(size=(N, d)).astype(np.float32)
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    bits = rng.random((N, L)) < 0.5
+    assign = rng.integers(0, 1 << 8, N).astype(np.uint32)
+    if kind == "subset":
+        tab = F.subset_table(bits, L)
+        fb = np.zeros((B, L), bool)
+        fb[:, :3] = True
+        filt = F.subset_filters(fb, L)
+    elif kind == "boolean":
+        tab = F.boolean_table(assign, 8)
+        sat = rng.random((B, 1 << 8)) < 0.3
+        filt = F.boolean_filters(sat, 8)
+    else:
+        L2 = 12          # joint tables share one n_bits across bit kinds
+        tab = F.joint_table(F.subset_table(bits[:, :L2], L2),
+                            F.boolean_table(assign % (1 << L2), L2))
+        fb = np.zeros((B, L2), bool)
+        fb[:, :2] = True
+        sat = rng.random((B, 1 << L2)) < 0.5
+        filt = Subset(fb) & ~Boolean(sat, L2)
+    gt0 = exact_filtered_knn(xb, tab, q, filt, k=10, block=128,
+                             use_kernel=False)
+    gt1 = exact_filtered_knn(xb, tab, q, filt, k=10, block=128,
+                             use_kernel=True)
+    # validity must be bit-identical (same survivors, same scan counts,
+    # same short-circuit evals); d2 comes from a different distance
+    # kernel (tile scan vs norms+matmul), so it is allclose, not bitwise
+    for f in ("ids", "n_dist", "n_feval"):
+        np.testing.assert_array_equal(np.asarray(getattr(gt0, f)),
+                                      np.asarray(getattr(gt1, f)),
+                                      err_msg=(kind, f))
+    np.testing.assert_allclose(np.asarray(gt0.d2), np.asarray(gt1.d2),
+                               rtol=1e-4, atol=1e-4)
+    assert int(np.asarray(gt0.n_dist).sum()) > 0
+
+
 def test_kernel_agrees_with_core_distance_path():
     """gather_dist must agree with the beam-search gathered_d2 helper."""
     from repro.core.distances import gathered_d2, sq_norms

@@ -88,3 +88,108 @@ def test_pack_unpack_roundtrip(L, x, y):
     packed = F.pack_bits(bits)
     out = np.asarray(F.unpack_bits(packed, L))
     np.testing.assert_array_equal(out, bits)
+
+
+# ---------------------------------------------------------------------------
+# compound filter expressions: random trees over all four leaf kinds
+# ---------------------------------------------------------------------------
+
+_EXPR_N, _EXPR_B, _EXPR_L = 48, 2, 5
+
+
+def _expr_table(rng):
+    """Composite table carrying all four attribute families, shared n_bits."""
+    return F.joint_table(
+        F.label_table(rng.integers(0, 3, _EXPR_N)),
+        F.range_table(rng.uniform(0, 1, _EXPR_N).astype(np.float32)),
+        F.subset_table(rng.random((_EXPR_N, _EXPR_L)) < 0.5, _EXPR_L),
+        F.boolean_table(rng.integers(0, 1 << _EXPR_L, _EXPR_N).astype(
+            np.uint32), _EXPR_L))
+
+
+def _rand_leaf(rng):
+    kind = rng.choice(["label", "range", "subset", "boolean"])
+    if kind == "label":
+        return F.Label(rng.integers(0, 3, _EXPR_B))
+    if kind == "range":
+        lo = rng.uniform(0, 0.7, _EXPR_B).astype(np.float32)
+        return F.Range(lo, lo + rng.uniform(0, 0.6, _EXPR_B)
+                       .astype(np.float32))
+    if kind == "subset":
+        return F.Subset(rng.random((_EXPR_B, _EXPR_L)) < 0.3)
+    return F.Boolean(rng.random((_EXPR_B, 1 << _EXPR_L)) < 0.4)
+
+
+def _rand_tree(rng, depth):
+    if depth <= 0 or rng.random() < 0.3:
+        return _rand_leaf(rng)
+    op = rng.choice(["and", "or", "not"])
+    if op == "not":
+        return ~_rand_tree(rng, depth - 1)
+    kids = [_rand_tree(rng, depth - 1)
+            for _ in range(int(rng.integers(2, 4)))]
+    out = kids[0]
+    for c in kids[1:]:
+        out = (out & c) if op == "and" else (out | c)
+    return out
+
+
+def _ref_valid(expr, table):
+    """Numpy logical composition over the ATOMIC leaf validities."""
+    if isinstance(expr, F.Leaf):
+        return np.asarray(F.matches_all(expr.filt, table))
+    if isinstance(expr, F.Not):
+        return ~_ref_valid(expr.child, table)
+    ref = _ref_valid(expr.children[0], table)
+    for c in expr.children[1:]:
+        r = _ref_valid(c, table)
+        ref = (ref & r) if isinstance(expr, F.And) else (ref | r)
+    return ref
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_expr_matches_equals_numpy_logical_composition(seed):
+    """matches() over a random depth<=3 tree == numpy and/or/not over the
+    atomic leaf validities, and dist_f's zero set is exactly that validity
+    (the graph comparator's compound invariant)."""
+    rng = np.random.default_rng(seed)
+    table = _expr_table(rng)
+    expr = _rand_tree(rng, 3)
+    want = _ref_valid(expr, table)
+    got = np.asarray(F.matches_all(expr, table))
+    np.testing.assert_array_equal(got, want, err_msg=expr.kind)
+    ids = jnp.arange(_EXPR_N)
+    attrs = {k: (v[None] if k != "bit_weights" else v)
+             for k, v in table.gather(ids).items()}
+    df = np.asarray(D.dist_f(expr, attrs))
+    np.testing.assert_array_equal(df == 0.0, want, err_msg=expr.kind)
+    # short-circuit eval counts are bounded by the leaf count and >= 1
+    _, ev = F.matches_counted(expr, attrs)
+    ev = np.asarray(ev)
+    assert (ev >= 1).all() and (ev <= F.n_leaves(expr)).all()
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_expr_selectivity_composition_bounds(seed):
+    """Composed estimates stay in [0,1]; And is <= every clause's estimate
+    and Or >= every clause's (independence composition is conservative in
+    exactly this direction)."""
+    from repro.serve.planner import estimate_selectivity
+    rng = np.random.default_rng(seed)
+    table = _expr_table(rng)
+    ids = jnp.arange(_EXPR_N)     # exact probe
+    kids = [_rand_leaf(rng) for _ in range(3)]
+    sels = [np.asarray(estimate_selectivity(c.filt, table, ids))
+            for c in kids]
+    s_and = np.asarray(estimate_selectivity(
+        F.And(*kids), table, ids))
+    s_or = np.asarray(estimate_selectivity(F.Or(*kids), table, ids))
+    for s in (s_and, s_or):
+        assert (s >= 0.0).all() and (s <= 1.0).all()
+    eps = 1e-6
+    assert (s_and <= np.min(sels, axis=0) + eps).all()
+    assert (s_or >= np.max(sels, axis=0) - eps).all()
+    s_not = np.asarray(estimate_selectivity(~kids[0], table, ids))
+    np.testing.assert_allclose(s_not, 1.0 - sels[0], atol=eps)
