@@ -1,75 +1,94 @@
-"""Distributed shard-and-merge JAG serving on a local device mesh.
+"""Sharded JAG serving: ShardedJAGIndex on a local "data"-axis mesh.
 
-Runs the exact shard_map program the 512-chip dry-run lowers, on however
-many CPU devices this host exposes (set XLA_FLAGS to fake more):
+The database is sharded row-wise across the mesh (one self-contained JAG
+sub-index per device), every route runs inside a shard_map program, and
+per-shard top-k results merge exactly — one all_gather of [B, k] per
+shard axis, bytes independent of N. The wrapper serves the same
+``search_auto(queries, filt, k, ls)`` surface as a single-device
+``JAGIndex``, so sharding is a build-time decision, not an API change:
 
   PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python examples/distributed_serve.py
+
+(When XLA_FLAGS is unset this script fakes 8 host devices itself.)
 """
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import JAGConfig, JAGIndex, range_table
-from repro.core.distributed import ShardedServeConfig, make_serve_step
+from repro.core import JAGConfig, JAGIndex, range_filters, range_table
+from repro.core.filters import Label, Range, joint_table, label_table
+from repro.core.ground_truth import exact_filtered_knn
+from repro.core.recall import recall_at_k
+from repro.serve.planner import PlannerConfig
+from repro.serve.sharded import ShardedJAGIndex
 
 
 def main():
-    n_dev = len(jax.devices())
-    model = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
-    from repro.launch.mesh import mesh_kwargs, set_mesh
-    mesh = jax.make_mesh((n_dev // model, model), ("data", "model"),
-                         **mesh_kwargs(2))
-    S = n_dev
-    print(f"devices={n_dev} mesh={dict(mesh.shape)} -> {S} index shards")
+    S = min(8, len(jax.devices()))
+    n_loc, d, b, k, ls = 500, 24, 32, 10, 48
+    n = S * n_loc
+    print(f"devices={len(jax.devices())} -> {S} shards x {n_loc} rows")
 
     rng = np.random.default_rng(0)
-    n_loc, d = 1000, 24
-    xb = rng.normal(size=(S, n_loc, d)).astype(np.float32) * 2
-    vals = rng.uniform(0, 100, (S, n_loc)).astype(np.float32)
-
-    # build one independent JAG per shard (in production: one per host)
+    xb = rng.normal(size=(n, d)).astype(np.float32)
+    labels = rng.integers(0, 4, n).astype(np.int32)
+    vals = rng.uniform(0, 1, n).astype(np.float32)
+    attr = joint_table(label_table(labels), range_table(vals))
     cfg = JAGConfig(degree=16, ls_build=32, batch_size=256, cand_pool=64)
-    graphs, entries = [], []
-    for s in range(S):
-        idx = JAGIndex.build(xb[s], range_table(vals[s]), cfg)
-        graphs.append(np.asarray(idx.graph))
-        entries.append(np.resize(np.atleast_1d(np.asarray(idx.entry)), 8))
-    graphs = np.stack(graphs)
-    entries = np.stack(entries).astype(np.int32)
-    xbn = (xb.astype(np.float64) ** 2).sum(-1).astype(np.float32)
 
-    B = 64
-    q = rng.normal(size=(B, d)).astype(np.float32) * 2
-    lo = rng.uniform(0, 80, B).astype(np.float32)
-    filt_data = {"lo": jnp.asarray(lo), "hi": jnp.asarray(lo + 10)}
+    # same rows, two servings: the sharded build splits rows contiguously
+    # and builds one sub-graph per shard (JAGIndex.shard(S) reshards a
+    # built index the same way)
+    sharded = ShardedJAGIndex.build(xb, attr, cfg, n_shards=S)
+    union = JAGIndex.build(xb, attr, cfg)
+    q = (xb[rng.integers(0, n, b)]
+         + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
 
-    step = jax.jit(make_serve_step(
-        mesh, ShardedServeConfig(k=10, ls=48, max_iters=96,
-                                 query_chunk=32), "range", "range"))
-    with set_mesh(mesh):
-        ids, prim, sec = step(jnp.asarray(graphs), jnp.asarray(xb),
-                              jnp.asarray(xbn),
-                              {"value": jnp.asarray(vals)},
-                              jnp.asarray(entries), jnp.asarray(q),
-                              filt_data)
-    ids = np.asarray(ids)
+    # the same selectivity-adaptive surface, now fanning out across shards
+    for name, hi in (("rare", 0.005), ("mid", 0.2), ("wide", 0.9)):
+        filt = range_filters(np.zeros(b, np.float32),
+                             np.full(b, hi, np.float32))
+        gt = exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q),
+                                filt, k=k)
+        res, plan = sharded.search_auto(q, filt, k=k, ls=ls,
+                                        return_plan=True)
+        rec = recall_at_k(np.asarray(res.ids),
+                          np.asarray(res.primary) == 0,
+                          np.asarray(gt.ids)).mean()
+        print(f"  band={name:4s} sel~{hi:<5} route={plan.route:10s} "
+              f"recall@10={float(rec):.3f}")
 
-    # verify against exact search over the union of shards
-    xf = xb.reshape(-1, d)
-    vf = vals.reshape(-1)
-    d2 = ((q[:, None] - xf[None]) ** 2).sum(-1)
-    mask = (vf[None] >= lo[:, None]) & (vf[None] <= (lo + 10)[:, None])
-    d2m = np.where(mask, d2, np.inf)
-    recs = []
-    for b in range(B):
-        gtb = [j for j in np.argsort(d2m[b])[:10] if d2m[b, j] < np.inf]
-        got = [i for i, p in zip(ids[b], np.asarray(prim)[b])
-               if p == 0 and i >= 0]
-        if gtb:
-            recs.append(len(set(gtb) & set(got)) / len(gtb))
-    print(f"distributed recall@10 over {S * n_loc} points: "
-          f"{np.mean(recs):.3f}")
+    # compound expression trees dispatch through the same sharded routes
+    expr = (Label(np.full(b, 2)) | Label(np.full(b, 3))) \
+        & Range(np.zeros(b, np.float32), np.full(b, 0.6, np.float32))
+    res, plan = sharded.search_auto(q, expr, k=k, ls=ls, return_plan=True)
+    gt = exact_filtered_knn(jnp.asarray(xb), attr, jnp.asarray(q), expr,
+                            k=k)
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(res.primary) == 0,
+                      np.asarray(gt.ids)).mean()
+    print(f"  compound (2|3)&range route={plan.route} "
+          f"recall@10={float(rec):.3f}")
+
+    # exact-merge semantics: force the exact-scan route everywhere and the
+    # sharded result is BIT-identical to the single-device union index —
+    # same ids, same keys, same telemetry, every field
+    force_exact = PlannerConfig(prefilter_max_sel=1.1,
+                                postfilter_min_sel=1.2)
+    a = sharded.search_auto(q, expr, k=k, ls=ls, planner=force_exact)
+    bres = union.search_auto(q, expr, k=k, ls=ls, planner=force_exact)
+    same = all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(bres, f)))
+               for f in a._fields)
+    print(f"  exact route bit-identical to single-device union: {same}")
     print("merge collective: one all_gather of [B, k] per shard axis "
           "(bytes independent of N)")
 

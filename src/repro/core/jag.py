@@ -301,6 +301,20 @@ class JAGIndex:
                              f"got {mode!r}")
         return (res, p) if return_plan else res
 
+    # -- multi-device serving (serve/sharded.py) ----------------------------
+    def shard(self, n_shards: int, mesh=None):
+        """Re-shard this index row-wise across ``n_shards`` devices.
+
+        Returns a ``serve.ShardedJAGIndex`` serving the same rows behind
+        the same ``search_auto`` surface; per-shard sub-graphs are rebuilt
+        from this index's rows and config (a built graph's edges cross any
+        row split, so an honest reshard is a rebuild). Requires N
+        divisible by ``n_shards`` and that many visible devices — fake
+        them with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+        """
+        from ..serve.sharded import shard_index
+        return shard_index(self, n_shards, mesh=mesh)
+
     # -- persistence ---------------------------------------------------------
     def _save_arrays(self) -> dict:
         """The index as a flat npz-ready dict (shared with repro.stream).

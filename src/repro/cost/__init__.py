@@ -28,13 +28,16 @@ replaces the ``compact_frac`` trigger with a predicted delta-tax vs
 compaction-cost break-even. See ``benchmarks/cost_bench.py`` for the CI
 calibration smoke.
 """
-from .calibrate import Calibration, run_calibration, calibrate, time_route
-from .model import (BASE_ROUTES, CostModel, CostModelRouter, Observation,
-                    feature_names, fit, phi)
+from .calibrate import (Calibration, calibrate, calibrate_shard_grid,
+                        run_calibration, time_route)
+from .model import (BASE_ROUTES, CostModel, CostModelRouter,
+                    InterpolatedCostModel, Observation, feature_names, fit,
+                    phi)
 from .registry import (SCHEMA_VERSION, CostRegistry, from_json, model_key,
                        to_json)
 
 __all__ = ["BASE_ROUTES", "Calibration", "CostModel", "CostModelRouter",
-           "CostRegistry", "Observation", "SCHEMA_VERSION", "calibrate",
+           "CostRegistry", "InterpolatedCostModel", "Observation",
+           "SCHEMA_VERSION", "calibrate", "calibrate_shard_grid",
            "feature_names", "fit", "from_json", "model_key", "phi",
            "run_calibration", "time_route", "to_json"]

@@ -216,3 +216,27 @@ def calibrate(*, fast: bool = False, meta: Optional[Dict] = None,
     m = dict(cal.meta)
     m.update(meta or {})
     return fit(cal.observations, m)
+
+
+def calibrate_shard_grid(n: int, d: int, *, fast: bool = True,
+                         meta: Optional[Dict] = None,
+                         **overrides) -> CostModel:
+    """One per-shard (n, d) grid entry for the sharded-serving registry.
+
+    Measures the base routes at exactly the per-shard row count a shard
+    serves (streaming costs excluded — sharded deltas are a follow-on) and
+    stamps ``meta["shard_shape"] = [n, d]``, which is what
+    ``registry.model_key`` suffixes the key with and what
+    ``CostRegistry.load_shard_grids`` groups
+    :class:`~repro.cost.model.InterpolatedCostModel` entries by. Calibrate
+    two or more n points per d and any fresh shard count in between
+    predicts by log-log interpolation, no new pass needed.
+    """
+    kw: Dict = dict(FAST_GRID if fast else FULL_GRID)
+    kw.update(ns=(int(n),), ds=(int(d),), include_streaming=False)
+    kw.update(overrides)
+    cal = run_calibration(**kw)
+    m = dict(cal.meta)
+    m["shard_shape"] = [int(n), int(d)]
+    m.update(meta or {})
+    return fit(cal.observations, m)

@@ -157,6 +157,77 @@ class CostModel:
         return float(math.exp(float(x @ w)))
 
 
+@dataclasses.dataclass
+class InterpolatedCostModel:
+    """Cost predictions between per-shard calibrated (N, d) grids.
+
+    Sharded serving changes the per-shard row count with the shard count
+    (N_loc = N / S), and a dedicated calibration pass per shard count
+    would make every resize an offline event. Instead the registry stores
+    one :class:`CostModel` per calibrated per-shard grid (``meta
+    ["shard_shape"] = [n, d]``) and this wrapper predicts at any fresh
+    shard shape: pick the d-group with the nearest log-distance, evaluate
+    the two n-bracketing grid models AT THEIR OWN grid n, and interpolate
+    log-linearly in log n. Exact at the grid points (the bracketing
+    weight degenerates to 0/1 and the grid model sees its own n) and
+    monotone in n between them (a log-log line is monotone); outside the
+    calibrated n span the nearest endpoint model extrapolates with the
+    true n, i.e. its own fitted log(n) slope.
+
+    Duck-typed to :class:`CostModel`'s ``covers``/``predict`` surface, so
+    ``CostModelRouter`` and the planner take either interchangeably.
+    """
+    grids: List[CostModel]
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for m in self.grids:
+            if "shard_shape" not in m.meta:
+                raise ValueError("every grid model needs meta['shard_shape']"
+                                 " = [n, d] — stamp it at calibration time")
+
+    def routes(self) -> Tuple[str, ...]:
+        common = set(self.grids[0].coef) if self.grids else set()
+        for m in self.grids[1:]:
+            common &= set(m.coef)
+        return tuple(sorted(common))
+
+    def covers(self, routes: Sequence[str], metric: str = "us") -> bool:
+        """True when EVERY grid covers every requested route — a fresh
+        shard shape may interpolate between any pair of neighbors."""
+        return bool(self.grids) and all(m.covers(routes, metric)
+                                        for m in self.grids)
+
+    def _d_group(self, d: float) -> List[CostModel]:
+        """Grids at the d nearest in log-distance, sorted ascending by n."""
+        best = min({float(m.meta["shard_shape"][1]) for m in self.grids},
+                   key=lambda gd: abs(math.log(max(gd, 1.0))
+                                      - math.log(max(d, 1.0))))
+        group = [m for m in self.grids
+                 if float(m.meta["shard_shape"][1]) == best]
+        return sorted(group, key=lambda m: float(m.meta["shard_shape"][0]))
+
+    def predict(self, route: str, features: Dict[str, float],
+                metric: str = "us") -> float:
+        n = max(float(features.get("n", 1.0)), 1.0)
+        group = self._d_group(float(features.get("d", 1.0)))
+        lo = [m for m in group if float(m.meta["shard_shape"][0]) <= n]
+        hi = [m for m in group if float(m.meta["shard_shape"][0]) >= n]
+        if not lo or not hi:       # outside the span: endpoint extrapolates
+            m = group[0] if not lo else group[-1]
+            return m.predict(route, features, metric)
+        m0, m1 = lo[-1], hi[0]
+        n0 = float(m0.meta["shard_shape"][0])
+        n1 = float(m1.meta["shard_shape"][0])
+        p0 = m0.predict(route, {**features, "n": n0}, metric)
+        if n0 == n1:
+            return p0
+        p1 = m1.predict(route, {**features, "n": n1}, metric)
+        t = (math.log(n) - math.log(n0)) / (math.log(n1) - math.log(n0))
+        return float(math.exp((1.0 - t) * math.log(max(p0, 1e-300))
+                              + t * math.log(max(p1, 1e-300))))
+
+
 def fit(observations: Sequence[Observation],
         meta: Optional[Dict] = None) -> CostModel:
     """Least-squares fit of log(cost) per route over a calibration run.

@@ -18,17 +18,29 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
-from .model import CostModel
+from .model import CostModel, InterpolatedCostModel
 
 SCHEMA_VERSION = 1
 
 
-def model_key(backend: str, dtype: str = "f32",
-              layout: str = "default") -> str:
-    """The registry key one calibration is valid for."""
-    return f"{backend}-{dtype}-{layout}"
+def model_key(backend: str, dtype: str = "f32", layout: str = "default",
+              shard_shape: Optional[Sequence[float]] = None) -> str:
+    """The registry key one calibration is valid for.
+
+    ``shard_shape = (n, d)`` suffixes the per-shard grid a sharded-serving
+    calibration was measured at (``cpu-f32-default@n125000-d64``): one
+    hardware triple holds many grid entries, and
+    :func:`CostRegistry.load_shard_grids` folds them into an
+    :class:`~repro.cost.model.InterpolatedCostModel` so a fresh shard
+    count predicts without a dedicated calibration pass.
+    """
+    base = f"{backend}-{dtype}-{layout}"
+    if shard_shape is None:
+        return base
+    n, d = (int(shard_shape[0]), int(shard_shape[1]))
+    return f"{base}@n{n}-d{d}"
 
 
 def to_json(model: CostModel) -> str:
@@ -64,7 +76,8 @@ class CostRegistry:
         m = model.meta
         return model_key(m.get("backend", "unknown"),
                          m.get("dtype", "f32"),
-                         m.get("layout", "default"))
+                         m.get("layout", "default"),
+                         m.get("shard_shape"))
 
     def save(self, model: CostModel) -> str:
         """Write the model under its own metadata key; returns the path."""
@@ -83,6 +96,30 @@ class CostRegistry:
             return None
         with open(path) as fh:
             return from_json(fh.read())
+
+    def load_shard_grids(self, backend: str, dtype: str = "f32",
+                         layout: str = "default"
+                         ) -> Optional[InterpolatedCostModel]:
+        """Every per-shard grid calibrated for this hardware key, folded
+        into one :class:`~repro.cost.model.InterpolatedCostModel`.
+
+        Collects all ``<base>@n<N>-d<D>`` entries; returns None when no
+        grid has been calibrated (the normal uncalibrated state — sharded
+        serving then falls back to static thresholds like everything
+        else). A loaded grid missing its ``shard_shape`` meta is a
+        corrupted artifact and raises rather than silently mis-keying.
+        """
+        prefix = model_key(backend, dtype, layout) + "@n"
+        grids = []
+        for key in self.keys():
+            if not key.startswith(prefix):
+                continue
+            with open(self.path(key)) as fh:
+                grids.append(from_json(fh.read()))
+        if not grids:
+            return None
+        return InterpolatedCostModel(
+            grids, meta=dict(backend=backend, dtype=dtype, layout=layout))
 
     def keys(self) -> Tuple[str, ...]:
         """Every calibrated key present in the registry directory."""

@@ -1,4 +1,5 @@
 """Distribution substrate: logical-axis sharding rules, collectives helpers,
 fault tolerance."""
-from .sharding import (Rules, make_rules, resolve_spec, tree_shardings,
-                       logical_constraint, use_rules, current_rules)
+from .sharding import (Rules, current_rules, logical_constraint, make_rules,
+                       put_db_sharded, resolve_spec, serve_mesh,
+                       tree_shardings, use_rules)

@@ -15,6 +15,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
@@ -114,6 +115,39 @@ def tree_shardings(spec_tree, shape_tree, rules: Rules):
     return jax.tree.map(one, spec_tree, shape_tree,
                         is_leaf=lambda x: isinstance(x, tuple) and all(
                             isinstance(e, (str, type(None))) for e in x))
+
+
+def serve_mesh(n_shards: int) -> Mesh:
+    """A ("data",)-axis mesh over the first ``n_shards`` local devices.
+
+    The sharded serving subsystem's mesh shape: row-wise database sharding
+    binds to the "data" axis (the ``db_shard`` rule below), queries stay
+    replicated. Raises when the host exposes fewer devices — fake more
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    devs = jax.devices()
+    if n_shards > len(devs):
+        raise ValueError(
+            f"n_shards={n_shards} > {len(devs)} visible devices — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards} "
+            f"(or lower n_shards)")
+    return Mesh(np.asarray(devs[:n_shards]), ("data",))
+
+
+def put_db_sharded(tree, rules: Rules):
+    """Place stacked per-shard arrays ([S, ...] leaves) on the mesh with
+    the leading dim bound to the ``db_shard`` rule (-> the "data" axis).
+
+    One ``jax.device_put`` per leaf; trailing dims stay replicated. The
+    divisibility guard in :func:`resolve_spec` applies — a leading dim not
+    divisible by the data-axis size falls back to replication rather than
+    erroring, matching every other rule-resolved placement.
+    """
+    def one(x):
+        spec = resolve_spec(("db_shard",) + (None,) * (x.ndim - 1),
+                            x.shape, rules)
+        return jax.device_put(x, NamedSharding(rules.mesh, spec))
+    return jax.tree.map(one, tree)
 
 
 def logical_constraint(x, axes: Sequence[Optional[str]]):

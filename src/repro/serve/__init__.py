@@ -12,20 +12,23 @@ calibrated ``repro.cost`` model is attached to the index, the planner's
 static thresholds are replaced by ``Executor.cost_router``'s
 argmin-of-predicted-cost routing (see ``repro.cost``).
 """
-from .dispatch import dispatch_per_query, merge_topk, regroup, run_route
+from .dispatch import (dispatch_per_query, fold_topk, merge_topk, regroup,
+                       run_route)
 from .engine import FusedEngine, make_fetch_fn
 from .executor import Executor
 from .layout import (FusedLayout, build_layout, extend_layout, load_layout,
                      save_layout)
 from .planner import (GroupPlan, Plan, PerQueryPlan, PlannerConfig, ROUTES,
                       choose_route, clause_eval_cost, estimate_selectivity,
-                      explain, leaf_selectivities, plan, plan_per_query,
-                      reorder_clauses, sample_ids)
+                      explain, leaf_selectivities, leaf_validity, plan,
+                      plan_per_query, reorder_clauses, sample_ids)
+from .sharded import ShardedJAGIndex
 
 __all__ = ["Executor", "FusedEngine", "FusedLayout", "GroupPlan", "Plan",
-           "PerQueryPlan", "PlannerConfig", "ROUTES", "build_layout",
-           "choose_route", "clause_eval_cost", "dispatch_per_query",
-           "estimate_selectivity", "explain", "extend_layout",
-           "leaf_selectivities", "load_layout", "make_fetch_fn",
-           "merge_topk", "plan", "plan_per_query", "regroup",
-           "reorder_clauses", "run_route", "sample_ids", "save_layout"]
+           "PerQueryPlan", "PlannerConfig", "ROUTES", "ShardedJAGIndex",
+           "build_layout", "choose_route", "clause_eval_cost",
+           "dispatch_per_query", "estimate_selectivity", "explain",
+           "extend_layout", "fold_topk", "leaf_selectivities",
+           "leaf_validity", "load_layout", "make_fetch_fn", "merge_topk",
+           "plan", "plan_per_query", "regroup", "reorder_clauses",
+           "run_route", "sample_ids", "save_layout"]

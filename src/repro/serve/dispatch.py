@@ -42,7 +42,8 @@ import numpy as np
 from ..core.beam_search import SearchResult
 from .planner import PerQueryPlan
 
-__all__ = ["dispatch_per_query", "merge_topk", "regroup", "run_route"]
+__all__ = ["dispatch_per_query", "fold_topk", "merge_topk", "regroup",
+           "run_route"]
 
 
 def run_route(executor, route: str, queries, filt, *, k: int,
@@ -91,6 +92,27 @@ def merge_topk(base: SearchResult, extra: SearchResult, *,
     return SearchResult(ids[:, :k], prim[:, :k], sec[:, :k], base.vlog,
                         base.n_expanded + extra.n_expanded,
                         base.n_dist + extra.n_dist)
+
+
+def fold_topk(parts, *, k: int) -> SearchResult:
+    """N-way :func:`merge_topk` fold over per-segment results, in order.
+
+    The sharded executor's cross-shard reduction: ``parts[i]`` holds shard
+    i's top-k with ids already globalized onto disjoint segments, and the
+    fold runs in segment order, so ties on the (primary, secondary) key
+    resolve to the LOWEST segment — and within a segment the lowest id —
+    exactly like one brute-force scan over the concatenated database.
+    ``jax.lax.sort`` is stable and the fold is left-associative, so the
+    result (including telemetry sums) is identical whether segments arrive
+    pre-merged or one at a time: merge_topk keeps base-side entries on
+    equal keys and every later segment enters as ``extra``.
+    """
+    if not parts:
+        raise ValueError("fold_topk needs at least one part")
+    out = parts[0]
+    for p in parts[1:]:
+        out = merge_topk(out, p, k=k)
+    return out
 
 
 def regroup(parts, groups, batch: int) -> SearchResult:

@@ -289,23 +289,29 @@ class Executor:
     def _reorder_compound(self, filt):
         """Short-circuit-optimal clause order for a compound expression.
 
-        Probes each leaf's selectivity over the executor's cached sample
-        rows (one compiled probe per tree signature) and asks the planner
-        for the cheapest-most-selective-first order. Host-side and static:
-        the reordered tree is result-identical (connectives commute), it
-        only changes which clauses the scan's short-circuit accounting
-        charges (``GroundTruth.n_feval``). Atomic filters and single-leaf
-        trees pass through untouched.
+        Probes each leaf's boolean validity over the executor's cached
+        sample rows (one compiled probe per tree signature) and asks the
+        planner for the cheapest-most-selective-first order; the boolean
+        vectors let the greedy ordering condition each pick on the clauses
+        already placed, so correlated clauses rank by their true joint
+        filtering power rather than an independence estimate. Host-side
+        and static: the reordered tree is result-identical (connectives
+        commute), it only changes which clauses the scan's short-circuit
+        accounting charges (``GroundTruth.n_feval``). Atomic filters and
+        single-leaf trees pass through untouched.
         """
         if not isinstance(filt, FilterExpr) or n_leaves(filt) < 2:
             return filt
-        from .planner import leaf_selectivities, reorder_clauses
+        from .planner import leaf_validity, reorder_clauses
         ids = self.sample_ids(self.index.attr.n, 1024, 0)
-        key = ("leafsel", "default", "f32", 0, 0, 0, filt.kind,
+        key = ("leafval", "default", "bool", 0, 0, 0, filt.kind,
                int(ids.shape[0]))
-        sels = self.run(key, lambda: leaf_selectivities,
-                        filt, self.index.attr, ids)
-        return reorder_clauses(filt, np.median(np.asarray(sels), axis=1))
+        valid = self.run(key, lambda: leaf_validity,
+                         filt, self.index.attr, ids)
+        # [L, B, S] -> per-leaf sample vectors pooled over the query batch
+        # (clause order is static for the whole batch, like the old median)
+        v = np.asarray(valid)
+        return reorder_clauses(filt, list(v.reshape(v.shape[0], -1)))
 
     def prefilter(self, queries, filt, *, k: int,
                   block: int = 4096, use_kernel: bool | None = None

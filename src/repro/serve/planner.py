@@ -35,13 +35,20 @@ predictions per route — the static thresholds remain the exact fallback
 whenever no model is attached or it doesn't cover the base routes.
 
 Compound filters: a FilterExpr tree (core.filters And/Or/Not over the four
-atomic leaves) plans exactly like an atomic filter — the probe samples each
-*leaf* once and composes the per-clause estimates under independence
-(product for AND, inclusion-exclusion 1 - prod(1 - s_i) for OR, complement
-for NOT), so routing — static thresholds or cost-model argmin — stays a
-per-query decision over one composed [B] selectivity vector. The prefilter
+atomic leaves) plans exactly like an atomic filter — the probe evaluates
+the WHOLE tree on the sampled rows, so the estimate is the joint
+selectivity, not an independence composition. Correlated clauses (a label
+that implies a range band, a subset mask nested inside the boolean
+predicate it encodes) used to be composed as if independent — a
+``label & range`` whose clauses coincide was estimated at sel² and
+mis-routed to the exact scan; the joint probe costs the same one gather
+(every leaf is evaluated on the same rows either way) and is exact on the
+sample. Routing — static thresholds or cost-model argmin — stays a
+per-query decision over one joint [B] selectivity vector. The prefilter
 route additionally asks :func:`reorder_clauses` for the short-circuit-
-optimal clause order (cheapest most-selective first) before scanning.
+optimal clause order (cheapest most-selective first, conditioned on the
+clauses already placed — :func:`leaf_validity` hands it the per-leaf
+boolean vectors, so the ordering also sees the correlations).
 
 Streaming: both planners probe whatever attribute table they are handed —
 ``StreamingJAGIndex.search_auto`` passes the live base+delta table, so the
@@ -156,33 +163,6 @@ def sample_ids(n: int, n_samples: int, seed: int = 0) -> jnp.ndarray:
     return jnp.asarray(rng.choice(n, n_samples, replace=False), jnp.int32)
 
 
-def _compose_selectivity(filt, leaf_sel):
-    """Combine per-leaf sampled selectivities over an expression tree.
-
-    Under clause independence: And multiplies (product is <= every
-    clause), Or composes by inclusion-exclusion — 1 - prod(1 - s_i) —
-    which is >= every clause and capped at 1 by construction, Not
-    complements. ``leaf_sel`` maps a FilterBatch to its f32[B] estimate.
-    """
-    if isinstance(filt, FilterBatch):
-        return leaf_sel(filt)
-    if isinstance(filt, Leaf):
-        return _compose_selectivity(filt.filt, leaf_sel)
-    if isinstance(filt, Not):
-        return 1.0 - _compose_selectivity(filt.child, leaf_sel)
-    if isinstance(filt, And):
-        out = _compose_selectivity(filt.children[0], leaf_sel)
-        for c in filt.children[1:]:
-            out = out * _compose_selectivity(c, leaf_sel)
-        return out
-    if isinstance(filt, Or):
-        miss = 1.0 - _compose_selectivity(filt.children[0], leaf_sel)
-        for c in filt.children[1:]:
-            miss = miss * (1.0 - _compose_selectivity(c, leaf_sel))
-        return 1.0 - miss
-    raise TypeError(f"not a filter: {type(filt)!r}")
-
-
 def estimate_selectivity(filt, table: AttrTable,
                          ids: jnp.ndarray) -> jnp.ndarray:
     """Per-query selectivity estimate f32[B] from a sampled matches() probe.
@@ -190,26 +170,27 @@ def estimate_selectivity(filt, table: AttrTable,
     Pure jnp on registered pytrees, so it traces under ``jax.jit`` for every
     filter kind; the executor caches one compilation per (kind, |sample|) —
     an expression's structural ``kind`` signature keys compound probes the
-    same way. Compound estimates compose the per-leaf sampled estimates
-    (product / inclusion-exclusion / complement), clipped to [0, 1].
+    same way. Compound estimates evaluate the WHOLE tree on the probe rows,
+    so they are JOINT: correlated clauses (a label implying a range band)
+    estimate at their true co-occurrence rate, where an independence
+    composition of per-leaf means can be off by the full correlation
+    factor. Atomic filters keep the identical matches_sampled probe.
     """
     if isinstance(filt, FilterBatch):
         ok = matches_sampled(filt, table, ids)
         return jnp.mean(ok.astype(jnp.float32), axis=-1)
     attrs = _broadcast_rows(table, jnp.asarray(ids, jnp.int32))
-
-    def leaf_sel(f):
-        return jnp.mean(matches(f, attrs).astype(jnp.float32), axis=-1)
-
-    return jnp.clip(_compose_selectivity(filt, leaf_sel), 0.0, 1.0)
+    return jnp.mean(matches(filt, attrs).astype(jnp.float32), axis=-1)
 
 
 def leaf_selectivities(filt, table: AttrTable,
                        ids: jnp.ndarray) -> jnp.ndarray:
     """Per-leaf sampled selectivities f32[L, B], leaves in DFS order.
 
-    The clause reorderer's probe: one gather of the sample rows feeds
-    every leaf's matches() mean.
+    One gather of the sample rows feeds every leaf's matches() mean.
+    Marginal summaries only — the clause reorderer now probes
+    :func:`leaf_validity` so it can see joint structure; this stays the
+    cheap per-leaf report for benchmarks and explain-style logging.
     """
     ids = jnp.asarray(ids, jnp.int32)
     attrs = _broadcast_rows(table, ids)
@@ -219,66 +200,132 @@ def leaf_selectivities(filt, table: AttrTable,
          for f in leaves])
 
 
-def _rank_and(sel: float, cost: float) -> float:
-    # classic predicate ordering: cost per unit of filtering power;
-    # for unit costs this is ascending selectivity
-    return cost / max(1.0 - sel, 1e-9)
+def leaf_validity(filt, table: AttrTable, ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-leaf boolean validity bool[L, B, S] on the probe rows (DFS order).
+
+    The raw material :func:`reorder_clauses` composes internal-node
+    selectivities from WITHOUT the independence assumption: every leaf is
+    evaluated on the same S sampled rows, so any And/Or node's joint
+    validity is just the boolean combination of its children's vectors.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    attrs = _broadcast_rows(table, ids)
+    leaves = filt.leaves() if isinstance(filt, FilterExpr) else [filt]
+    return jnp.stack([matches(f, attrs) for f in leaves])
 
 
-def _rank_or(sel: float, cost: float) -> float:
-    return cost / max(sel, 1e-9)
+def _leaf_values(leaf_sels):
+    """Normalize reorder inputs: scalars (independence mode) or per-leaf
+    boolean arrays such as ``leaf_validity`` rows (joint mode). A mixed
+    list degrades every vector to its mean so one mode runs uniformly."""
+    out = [np.asarray(v) for v in leaf_sels]
+    if any(a.ndim == 0 for a in out):
+        return [float(a) if a.ndim == 0 else float(np.mean(a)) for a in out]
+    return [a.astype(bool) for a in out]
+
+
+def _frac(v) -> float:
+    """Mass of a validity value: the mean of a boolean vector, or the
+    scalar probability itself."""
+    return float(np.mean(v)) if isinstance(v, np.ndarray) else float(v)
+
+
+def _vand(a, b):
+    """Conjunction of two validity values (boolean AND, or the
+    independence product for scalars)."""
+    if isinstance(a, np.ndarray) and isinstance(b, np.ndarray):
+        return a & b
+    return a * b
+
+
+def _vnot(v):
+    return ~v if isinstance(v, np.ndarray) else 1.0 - v
+
+
+def _vtrue(like):
+    return (np.ones_like(like, dtype=bool)
+            if isinstance(like, np.ndarray) else 1.0)
 
 
 def _order_clauses(filt, leaf_iter, reorder: bool):
-    """Recursive (expr, composed_sel, expected_evals_per_point)."""
+    """Recursive (expr, validity, expected_evals_per_point).
+
+    ``validity`` is either a scalar probability (legacy independence mode)
+    or a boolean sample vector (joint mode): an internal node's vector is
+    the boolean combination of its children's, so selectivities and
+    short-circuit live-mass estimates reflect clause correlations exactly
+    (on the sample). Ordering is greedy conditional: each next clause is
+    the one with the best cost per unit of conditional filtering power
+    GIVEN the clauses already placed — which reduces to the classic
+    cost/(1-sel) (And) and cost/sel (Or) static sort when clauses are
+    independent scalars.
+    """
     if isinstance(filt, FilterBatch):
-        return filt, float(next(leaf_iter)), 1.0
+        return filt, next(leaf_iter), 1.0
     if isinstance(filt, Leaf):
-        f, s, c = _order_clauses(filt.filt, leaf_iter, reorder)
-        return Leaf(f), s, c
+        f, v, c = _order_clauses(filt.filt, leaf_iter, reorder)
+        return Leaf(f), v, c
     if isinstance(filt, Not):
-        ch, s, c = _order_clauses(filt.child, leaf_iter, reorder)
-        return Not(ch), 1.0 - s, c
+        ch, v, c = _order_clauses(filt.child, leaf_iter, reorder)
+        return Not(ch), _vnot(v), c
     if isinstance(filt, (And, Or)):
         kids = [_order_clauses(c, leaf_iter, reorder)
                 for c in filt.children]
         is_and = isinstance(filt, And)
         if reorder:
-            # stable sort: ties keep the written clause order
-            kids.sort(key=lambda t: (_rank_and if is_and else _rank_or)(
-                t[1], t[2]))
-        live, cost = 1.0, 0.0
-        for _, s, c in kids:
-            cost += live * c
-            live *= s if is_and else (1.0 - s)
-        sel = live if is_and else 1.0 - live
+            ordered, live = [], _vtrue(kids[0][1])
+            while kids:
+                lm = _frac(live)
+
+                def rank(t):
+                    inter = _frac(_vand(live, t[1]))
+                    # And: cost per conditionally-killed mass; Or: cost
+                    # per conditionally-accepted mass. min() keeps the
+                    # first of rank-tied clauses (written order, like the
+                    # stable sort it replaces).
+                    power = (lm - inter) if is_and else inter
+                    return t[2] / max(power, 1e-9)
+
+                i = min(range(len(kids)), key=lambda j: rank(kids[j]))
+                t = kids.pop(i)
+                ordered.append(t)
+                live = _vand(live, t[1] if is_and else _vnot(t[1]))
+            kids = ordered
+        live, cost = _vtrue(kids[0][1]), 0.0
+        for _, v, c in kids:
+            cost += _frac(live) * c
+            live = _vand(live, v if is_and else _vnot(v))
+        val = live if is_and else _vnot(live)
         node = (And if is_and else Or)(*[k[0] for k in kids])
-        return node, sel, cost
+        return node, val, cost
     raise TypeError(f"not a filter: {type(filt)!r}")
 
 
 def reorder_clauses(filt, leaf_sels):
     """Short-circuit-optimal clause order, cheapest-most-selective first.
 
-    ``leaf_sels``: one scalar selectivity per leaf in DFS order (e.g. the
-    medians of :func:`leaf_selectivities`). And children sort ascending by
-    cost/(1-sel) (kill cheap and early), Or children ascending by cost/sel
-    (accept cheap and early); subtree costs are expected short-circuit
-    evals per point, so nesting composes. Boolean connectives commute, so
-    the reordered tree is result-identical — only ``n_feval`` changes.
-    Atomic filters pass through unchanged.
+    ``leaf_sels``: one value per leaf in DFS order — either scalar
+    selectivities (e.g. the medians of :func:`leaf_selectivities`;
+    composed under independence) or per-leaf boolean sample vectors (the
+    rows of :func:`leaf_validity`; composed JOINTLY, so correlated
+    clauses order by their true conditional filtering power). And children
+    greedily take the best cost-per-killed-mass next, Or children the best
+    cost-per-accepted-mass, each conditioned on the clauses already
+    placed; subtree costs are expected short-circuit evals per point, so
+    nesting composes. Boolean connectives commute, so the reordered tree
+    is result-identical — only ``n_feval`` changes. Atomic filters pass
+    through unchanged.
     """
     if not isinstance(filt, FilterExpr):
         return filt
-    return _order_clauses(filt, iter([float(s) for s in leaf_sels]),
-                          True)[0]
+    return _order_clauses(filt, iter(_leaf_values(leaf_sels)), True)[0]
 
 
 def clause_eval_cost(filt, leaf_sels) -> float:
     """Expected short-circuit leaf evals per scanned point, given the
-    tree's CURRENT clause order and per-leaf selectivities (DFS order)."""
-    return _order_clauses(filt, iter([float(s) for s in leaf_sels]),
-                          False)[2]
+    tree's CURRENT clause order and per-leaf selectivities or validity
+    vectors (DFS order; scalar = independence, boolean vector = joint)."""
+    return _order_clauses(filt, iter(_leaf_values(leaf_sels)), False)[2]
 
 
 def choose_route(sel: float, cfg: PlannerConfig) -> str:

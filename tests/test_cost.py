@@ -17,8 +17,9 @@ import pytest
 from repro.core import filters as F
 from repro.core.jag import JAGConfig, JAGIndex
 from repro.cost import (BASE_ROUTES, CostModel, CostModelRouter,
-                        CostRegistry, Observation, calibrate, fit,
-                        from_json, model_key, phi, time_route, to_json)
+                        CostRegistry, InterpolatedCostModel, Observation,
+                        calibrate, fit, from_json, model_key, phi,
+                        time_route, to_json)
 from repro.cost.model import delta_scan_tax
 from repro.stream import StreamingJAGIndex
 
@@ -213,6 +214,83 @@ def test_registry_keys_and_round_trip(tmp_path):
     got = reg.load("cpu")
     assert got is not None and got.coef == model.coef
     assert reg.load("tpu") is None
+
+
+# ---------------------------------------------------------------------------
+# per-shard (N, d) grids: registry round-trip + interpolated predictions
+# ---------------------------------------------------------------------------
+
+def _shard_grid_model(n, d=16):
+    """Noise-free base-route calibration pinned at one per-shard (n, d)."""
+    rng = np.random.default_rng(n)
+    obs = []
+    for route in BASE_ROUTES:
+        w = np.asarray(W_TRUE[route])
+        for _ in range(16):
+            f = dict(sel=float(rng.uniform(0.001, 1.0)), n=n, d=d,
+                     ls=int(rng.choice([32, 64, 128])), k=10,
+                     n_clauses=int(rng.integers(1, 4)))
+            us = float(np.exp(phi(route, f) @ w))
+            obs.append(Observation(route, f, us=us, n_dist=2.0 * us))
+    return fit(obs, dict(backend="cpu", dtype="f32", layout="default",
+                         shard_shape=[n, d]))
+
+
+def test_shard_grid_key_round_trip_and_interpolation(tmp_path):
+    reg = CostRegistry(str(tmp_path / "reg"))
+    assert reg.load_shard_grids("cpu") is None       # uncalibrated state
+    m_lo, m_hi = _shard_grid_model(1000), _shard_grid_model(8000)
+    assert reg.save(m_lo).endswith("cost-cpu-f32-default@n1000-d16.json")
+    assert reg.save(m_hi).endswith("cost-cpu-f32-default@n8000-d16.json")
+    assert set(reg.keys()) == {model_key("cpu", shard_shape=(1000, 16)),
+                               model_key("cpu", shard_shape=(8000, 16))}
+    assert reg.load("cpu") is None     # grid entries never shadow the base
+    interp = reg.load_shard_grids("cpu")
+    assert isinstance(interp, InterpolatedCostModel)
+    assert interp.covers(BASE_ROUTES) and interp.covers(BASE_ROUTES,
+                                                        "n_dist")
+    f = dict(sel=0.1, d=16, ls=64, k=10, n_clauses=1)
+    for route in BASE_ROUTES:
+        # exact at the calibrated grid points
+        for m, n in ((m_lo, 1000), (m_hi, 8000)):
+            assert math.isclose(interp.predict(route, dict(f, n=n)),
+                                m.predict(route, dict(f, n=n)),
+                                rel_tol=1e-12), (route, n)
+        # strictly monotone in n between the grids (every route's fitted
+        # n-slope is positive, so the log-log line must ascend)
+        ns = np.geomspace(1000, 8000, 9)
+        costs = [interp.predict(route, dict(f, n=float(n))) for n in ns]
+        assert all(a < b for a, b in zip(costs, costs[1:])), (route, costs)
+        # the second metric interpolates independently (generated at 2x us)
+        assert math.isclose(interp.predict(route, dict(f, n=2500), "n_dist"),
+                            2 * interp.predict(route, dict(f, n=2500)),
+                            rel_tol=1e-9)
+        # outside the span the endpoint model extrapolates with the TRUE n
+        assert math.isclose(interp.predict(route, dict(f, n=500)),
+                            m_lo.predict(route, dict(f, n=500)),
+                            rel_tol=1e-12)
+        assert math.isclose(interp.predict(route, dict(f, n=30000)),
+                            m_hi.predict(route, dict(f, n=30000)),
+                            rel_tol=1e-12)
+
+
+def test_interpolated_model_validates_and_gates_like_cost_model():
+    plain = fit(_synthetic_obs(), dict(backend="cpu"))
+    with pytest.raises(ValueError, match="shard_shape"):
+        InterpolatedCostModel([plain])
+    # partial grids gate covers() exactly like a partial CostModel
+    m = _shard_grid_model(1000)
+    partial = CostModel(coef={"graph": m.coef["graph"]},
+                        meta=dict(m.meta, shard_shape=[4000, 16]))
+    mixed = InterpolatedCostModel([m, partial])
+    assert not mixed.covers(BASE_ROUTES)
+    assert mixed.covers(("graph",))
+    assert not InterpolatedCostModel([]).covers(BASE_ROUTES)
+    # a CostModelRouter accepts the duck-typed interpolated model
+    router = CostModelRouter(InterpolatedCostModel(
+        [_shard_grid_model(1000), _shard_grid_model(8000)]),
+        n=2000, d=16, k=10, ls=64)
+    assert router.route(0.5) in BASE_ROUTES
 
 
 # ---------------------------------------------------------------------------

@@ -18,9 +18,11 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import filters as F
+from repro.core.beam_search import SearchResult
 from repro.core.ground_truth import exact_filtered_knn
 from repro.core.jag import JAGConfig, JAGIndex
-from repro.serve.dispatch import dispatch_per_query, run_route
+from repro.serve.dispatch import (dispatch_per_query, fold_topk, merge_topk,
+                                  run_route)
 from repro.serve.planner import (PerQueryPlan, PlannerConfig, plan,
                                  plan_per_query, sample_ids)
 
@@ -356,3 +358,106 @@ def test_exact_filtered_knn_unchanged_by_gather_fix():
     want = np.where(np.take_along_axis(d2, order, 1) < np.inf, order, -1)
     np.testing.assert_array_equal(np.asarray(gt.ids), want)
     np.testing.assert_array_equal(np.asarray(gt.n_dist), ok.sum(1))
+
+
+# ---------------------------------------------------------------------------
+# fold_topk: the sharded executor's N-way cross-segment merge
+# ---------------------------------------------------------------------------
+
+def _part(ids, sec):
+    """A per-segment SearchResult in merge normal form: valid entries sorted
+    by (0, sec), -1 padding at (INF, INF) — what every route emits."""
+    ids = np.asarray(ids, np.int32)
+    valid = ids >= 0
+    prim = np.where(valid, 0.0, np.inf).astype(np.float32)
+    sec = np.where(valid, np.asarray(sec, np.float32), np.inf)
+    b = ids.shape[0]
+    return SearchResult(jnp.asarray(ids), jnp.asarray(prim),
+                        jnp.asarray(sec.astype(np.float32)),
+                        jnp.zeros((b, 0), jnp.int32),
+                        jnp.ones((b,), jnp.int32),
+                        jnp.asarray(valid.sum(1).astype(np.int32)))
+
+
+def _fold_reference(parts, k):
+    """Brute-force fold reference: stable sort of the concatenation."""
+    prim = np.concatenate([np.asarray(p.primary) for p in parts], axis=1)
+    sec = np.concatenate([np.asarray(p.secondary) for p in parts], axis=1)
+    ids = np.concatenate([np.asarray(p.ids) for p in parts], axis=1)
+    order = np.lexsort((sec, prim), axis=1)[:, :k]   # np.lexsort is stable
+    take = lambda a: np.take_along_axis(a, order, axis=1)  # noqa: E731
+    return take(ids), take(prim), take(sec)
+
+
+def test_fold_topk_absorbs_empty_shard_results():
+    """A shard with zero filter-passing rows contributes only telemetry."""
+    p0 = _part([[0, 3, -1]], [[1.0, 4.0, np.inf]])
+    empty = _part([[-1, -1, -1]], [[np.inf] * 3])
+    p2 = _part([[20, -1, -1]], [[2.0, np.inf, np.inf]])
+    out = fold_topk([p0, empty, p2], k=3)
+    np.testing.assert_array_equal(np.asarray(out.ids), [[0, 20, 3]])
+    np.testing.assert_array_equal(np.asarray(out.secondary),
+                                  [[1.0, 2.0, 4.0]])
+    assert int(out.n_dist[0]) == 3            # 2 + 0 + 1 real evaluations
+    # an all-empty fold stays the all-invalid result
+    none = fold_topk([empty, empty], k=3)
+    np.testing.assert_array_equal(np.asarray(none.ids), [[-1, -1, -1]])
+    assert np.isinf(np.asarray(none.primary)).all()
+
+
+def test_fold_topk_k_exceeds_single_shard_match_count():
+    """k=5 with 1- and 3-match shards: the union's 4 matches fill first,
+    then -1/INF padding — never a duplicated or invented id."""
+    a = _part([[7, -1, -1, -1, -1]], [[3.0] + [np.inf] * 4])
+    b = _part([[100, 105, 101, -1, -1]],
+              [[1.0, 2.0, 9.0, np.inf, np.inf]])
+    out = fold_topk([a, b], k=5)
+    np.testing.assert_array_equal(np.asarray(out.ids),
+                                  [[100, 105, 7, 101, -1]])
+    np.testing.assert_array_equal(np.asarray(out.secondary),
+                                  [[1.0, 2.0, 3.0, 9.0, np.inf]])
+    assert int(out.n_dist[0]) == 4
+
+
+def test_fold_topk_tie_break_is_segment_order_across_three_segments():
+    """The same (primary, secondary) key on >= 3 segments resolves in
+    segment order — the union-scan tie rule — and the fold gives the same
+    answer under either association, because merge_topk's stable sort
+    keeps base-side entries first on equal keys."""
+    parts = [_part([[s * 100 + 1, s * 100 + 5]], [[2.5, 2.5]])
+             for s in range(3)]                 # identical keys everywhere
+    out = fold_topk(parts, k=4)
+    np.testing.assert_array_equal(np.asarray(out.ids), [[1, 5, 101, 105]])
+    left = merge_topk(merge_topk(parts[0], parts[1], k=4), parts[2], k=4)
+    right = merge_topk(parts[0], merge_topk(parts[1], parts[2], k=4), k=4)
+    for f in ("ids", "primary", "secondary"):
+        np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                      np.asarray(getattr(left, f)), f)
+        np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                      np.asarray(getattr(right, f)), f)
+
+
+def test_fold_topk_matches_stable_concat_sort_reference():
+    rng = np.random.default_rng(41)
+    b, k, S = 6, 8, 5
+    parts = []
+    for s in range(S):
+        n_valid = rng.integers(0, k + 1, b)
+        sec = np.sort(rng.choice(np.arange(1, 50, dtype=np.float32) / 4,
+                                 (b, k), replace=True), axis=1)
+        ids = np.arange(k)[None] + s * 1000
+        mask = np.arange(k)[None] < n_valid[:, None]
+        parts.append(_part(np.where(mask, ids, -1),
+                           np.where(mask, sec, np.inf)))
+    out = fold_topk(parts, k=k)
+    ids, prim, sec = _fold_reference(parts, k)
+    np.testing.assert_array_equal(np.asarray(out.ids), ids)
+    np.testing.assert_array_equal(np.asarray(out.primary), prim)
+    np.testing.assert_array_equal(np.asarray(out.secondary), sec)
+    want_nd = sum(int(np.asarray(p.n_dist).sum()) for p in parts)
+    assert int(np.asarray(out.n_dist).sum()) == want_nd
+
+
+def test_fold_topk_rejects_empty_part_list():
+    with pytest.raises(ValueError, match="at least one"):
+        fold_topk([], k=3)

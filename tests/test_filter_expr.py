@@ -6,11 +6,12 @@ FilterBatch operands coerce; (2) ``as_filter`` normalization — a
 single-leaf expression IS its atomic FilterBatch (same results, same
 executor cache key, zero new compilations); (3) compound ``search_auto``
 bit-identity with the ``exact_filtered_knn`` oracle on every forced route
-and through the streaming delta merge; (4) planner selectivity composition
-(product / inclusion-exclusion / complement) and clause reordering
+and through the streaming delta merge; (4) planner JOINT selectivity
+sampling (the probe evaluates the whole tree, so correlated clauses
+estimate at their true co-occurrence rate) and clause reordering
 (result-identical, strictly fewer short-circuit evals with the rare clause
-first); (5) the deprecation shim, ``explain(filt=)``, and ``joint_table``
-validation.
+first; validity vectors let the greedy order see correlations); (5) the
+deprecation shim, ``explain(filt=)``, and ``joint_table`` validation.
 """
 import warnings
 
@@ -193,21 +194,28 @@ def test_compound_matches_equals_numpy_composition():
                                       err_msg=expr.kind)
 
 
-def test_estimate_selectivity_composes_and_bounds():
+def test_estimate_selectivity_is_joint_and_bounds():
     idx, _, labels, vals = _setup()
     ids = np.arange(N, dtype=np.int32)        # exact probe
     a = Label(np.full(B, 2))
     b = Range(np.zeros(B, np.float32), np.full(B, 0.3, np.float32))
+    ok_a = _np_valid(a, labels, vals)          # [B, N] reference validity
+    ok_b = _np_valid(b, labels, vals)
     sa = np.asarray(estimate_selectivity(as_filter(a), idx.attr, ids))
     sb = np.asarray(estimate_selectivity(as_filter(b), idx.attr, ids))
     s_and = np.asarray(estimate_selectivity(a & b, idx.attr, ids))
     s_or = np.asarray(estimate_selectivity(a | b, idx.attr, ids))
     s_not = np.asarray(estimate_selectivity(~a, idx.attr, ids))
-    np.testing.assert_allclose(s_and, sa * sb, atol=1e-6)
-    np.testing.assert_allclose(s_or, 1 - (1 - sa) * (1 - sb), atol=1e-6)
+    # JOINT semantics: the whole-tree probe equals the mean of the boolean
+    # combination on the probe rows, not an independence composition
+    np.testing.assert_allclose(s_and, (ok_a & ok_b).mean(axis=1), atol=1e-6)
+    np.testing.assert_allclose(s_or, (ok_a | ok_b).mean(axis=1), atol=1e-6)
     np.testing.assert_allclose(s_not, 1 - sa, atol=1e-6)
+    np.testing.assert_allclose(sa, ok_a.mean(axis=1), atol=1e-6)
+    np.testing.assert_allclose(sb, ok_b.mean(axis=1), atol=1e-6)
     for s in (s_and, s_or, s_not):
         assert (s >= 0).all() and (s <= 1).all()
+    # joint bounds are exact, not just approximate
     assert (s_and <= np.minimum(sa, sb) + 1e-6).all()
     assert (s_or >= np.maximum(sa, sb) - 1e-6).all()
     # leaf probe: DFS order, [L, B]
@@ -215,6 +223,84 @@ def test_estimate_selectivity_composes_and_bounds():
     assert ls.shape == (2, B)
     np.testing.assert_allclose(ls[0], sa, atol=1e-6)
     np.testing.assert_allclose(ls[1], sb, atol=1e-6)
+    # validity probe: DFS order, [L, B, S]
+    from repro.serve.planner import leaf_validity
+    lv = np.asarray(leaf_validity(a & b, idx.attr, ids))
+    assert lv.shape == (2, B, N) and lv.dtype == bool
+    np.testing.assert_array_equal(lv[0], ok_a)
+    np.testing.assert_array_equal(lv[1], ok_b)
+
+
+def _correlated_table():
+    """1000 rows where labels IMPLY range bands (deterministic fractions).
+
+    value[i] = (i + .5)/1000; label 7 <=> value in [0, .38) u (.5, .52),
+    label 8 <=> value in (.55, .65), else i % 4. So Label(8) coincides
+    exactly with Range(.55, .65): joint sel 0.1, independence product 0.01.
+    """
+    n2 = 1000
+    vals = ((np.arange(n2) + 0.5) / n2).astype(np.float32)
+    labels = (np.arange(n2) % 4).astype(np.int32)
+    labels[(vals < 0.38) | ((vals > 0.5) & (vals < 0.52))] = 7
+    labels[(vals > 0.55) & (vals < 0.65)] = 8
+    tab = joint_table(F.label_table(labels), F.range_table(vals))
+    return tab, labels, vals
+
+
+def test_correlated_clauses_route_on_joint_not_independence():
+    # satellite: a label that implies a range band — independence says
+    # sel = 0.1 * 0.1 = 0.01 (prefilter band), the truth is 0.1 (graph
+    # band): >2x wrong would mis-route every query to the exact scan
+    tab, labels, vals = _correlated_table()
+    ids = np.arange(tab.n, dtype=np.int32)
+    expr = Label(np.full(B, 8)) & Range(np.full(B, 0.55, np.float32),
+                                        np.full(B, 0.65, np.float32))
+    s = np.asarray(estimate_selectivity(expr, tab, ids))
+    sa, sb = np.asarray(leaf_selectivities(expr, tab, ids))
+    np.testing.assert_allclose(s, 0.1, atol=1e-6)          # true joint
+    np.testing.assert_allclose(sa * sb, 0.01, atol=1e-6)   # indep estimate
+    assert (s / (sa * sb) > 2.0).all()                     # >2x wrong
+    p = plan(expr, tab, PlannerConfig(n_samples=tab.n))
+    assert p.route == "graph"              # joint 0.1: the graph band
+    # the independence product would have dropped into the prefilter band
+    assert float(np.median(sa * sb)) <= PlannerConfig().prefilter_max_sel
+    pq = plan_per_query(expr, tab, PlannerConfig(n_samples=tab.n))
+    assert all(r == "graph" for r in pq.routes)
+
+
+def test_reorder_with_validity_vectors_sees_correlations():
+    # A = range[0,.4] (sel .4), B = label 7 (sel .4, but A&B = .38 — B is
+    # nearly redundant given A), C = range[.25,.75] (sel .5, A&C = .15).
+    # Independence orders A,B,C (B's marginal ties A's); the joint greedy
+    # sees B's conditional kill power is ~0 after A and orders A,C,B.
+    from repro.serve.planner import leaf_validity
+    tab, labels, vals = _correlated_table()
+    ids = np.arange(tab.n, dtype=np.int32)
+    A = Range(np.full(B, 0.0, np.float32), np.full(B, 0.4, np.float32))
+    Bc = Label(np.full(B, 7))
+    C = Range(np.full(B, 0.25, np.float32), np.full(B, 0.75, np.float32))
+    expr = A & Bc & C
+    lv = np.asarray(leaf_validity(expr, tab, ids))
+    vecs = list(lv.reshape(lv.shape[0], -1))   # pooled, like the executor
+    joint_order = reorder_clauses(expr, vecs)
+    indep_order = reorder_clauses(expr, [0.4, 0.4, 0.5])
+    assert indep_order.kind == "(range&label&range)"   # A, B, C
+    assert joint_order.kind == "(range&range&label)"   # A, C, B
+    # the joint order short-circuits strictly cheaper ON THE TRUE DATA
+    c_joint = clause_eval_cost(joint_order, [vecs[0], vecs[2], vecs[1]])
+    c_indep = clause_eval_cost(indep_order, vecs)
+    assert c_joint < c_indep
+    np.testing.assert_allclose(c_indep, 1 + 0.4 + 0.38, atol=1e-3)
+    np.testing.assert_allclose(c_joint, 1 + 0.4 + 0.15, atol=1e-3)
+    # result-identical, strictly fewer measured short-circuit evals
+    rng = np.random.default_rng(11)
+    xb = rng.normal(size=(tab.n, D)).astype(np.float32)
+    q = xb[:B] + 0.05 * rng.normal(size=(B, D)).astype(np.float32)
+    gt_i = exact_filtered_knn(xb, tab, q, indep_order, k=10)
+    gt_j = exact_filtered_knn(xb, tab, q, joint_order, k=10)
+    np.testing.assert_array_equal(np.asarray(gt_i.ids), np.asarray(gt_j.ids))
+    np.testing.assert_array_equal(np.asarray(gt_i.d2), np.asarray(gt_j.d2))
+    assert (np.asarray(gt_j.n_feval) < np.asarray(gt_i.n_feval)).all()
 
 
 # ---------------------------------------------------------------------------
@@ -349,7 +435,7 @@ def test_executor_prefilter_reorders_compound_automatically():
     keys = [k for k in idx.executor.cache_keys() if k[0] == "prefilter"
             and str(k[6]) in ("(label&range)", "(range&label)")]
     assert {str(k[6]) for k in keys} == {"(label&range)"}
-    assert any(k[0] == "leafsel" for k in idx.executor.cache_keys())
+    assert any(k[0] == "leafval" for k in idx.executor.cache_keys())
 
 
 def test_or_reorder_puts_common_clause_first():

@@ -1,0 +1,295 @@
+"""Sharded serving: shard_map routes + exact cross-shard top-k merge.
+
+Covers: (1) S=1 bit-identity of the sharded ``search_auto`` surface with a
+single-device index over the same rows — the exact-scan route across all
+four filter kinds and a compound expression is identical on EVERY
+SearchResult field, the graph route on everything but the (deliberately
+width-0) vlog; (2) the 8-fake-device subprocess acceptance test: sharded
+results bit-identical to a single-device index built over the union of
+shard rows, all four kinds + compound; (3) construction validation
+(divisibility, mesh axis, shard row-count mismatch, too few devices);
+(4) cost routing at the per-shard shape through an InterpolatedCostModel.
+
+Multi-device cases run in a subprocess with faked host devices so the rest
+of the suite keeps seeing 1 device.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import filters as F
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.core.filters import AttrTable, Label, Range, joint_table
+from repro.serve.planner import PlannerConfig
+from repro.serve.sharded import ShardedJAGIndex, shard_index
+
+N, D, B = 400, 8, 6
+CFG = JAGConfig(degree=10, ls_build=16, batch_size=128, cand_pool=32,
+                calib_samples=32, n_seeds=4)
+# the documented force-exact planner: prefilter everywhere -> both sides
+# run the same masked scan, so results must be bitwise equal
+FORCE_PRE = PlannerConfig(prefilter_max_sel=1.1, postfilter_min_sel=1.2)
+
+_STATE = {}
+
+
+def _mk_dataset(kind, rng):
+    """(attr table, per-query filter) with mid-band selectivity."""
+    if kind == F.RANGE:
+        tab = F.range_table(rng.uniform(0, 1, N).astype(np.float32))
+        filt = F.range_filters(np.zeros(B, np.float32),
+                               np.full(B, 0.2, np.float32))
+    elif kind == F.LABEL:
+        tab = F.label_table(rng.integers(0, 5, N).astype(np.int32))
+        filt = F.label_filters(np.full(B, 2))
+    elif kind == F.SUBSET:
+        tab = F.subset_table(rng.random((N, 16)) < 0.5, 16)
+        fb = np.zeros((B, 16), bool)
+        fb[:, :3] = True
+        filt = F.subset_filters(fb, 16)
+    else:  # BOOLEAN
+        nv, size = 8, 1 << 8
+        tab = F.boolean_table(rng.integers(0, size, N).astype(np.uint32),
+                              nv)
+        sat = np.zeros((B, size), bool)
+        for i in range(B):
+            sat[i, rng.choice(size, 64, replace=False)] = True
+        filt = F.boolean_filters(sat, nv)
+    return tab, filt
+
+
+def _setup(kind):
+    if kind not in _STATE:
+        rng = np.random.default_rng(hash(kind) % 2**31)
+        xb = rng.normal(size=(N, D)).astype(np.float32)
+        tab, filt = _mk_dataset(kind, rng)
+        q = (xb[rng.integers(0, N, B)]
+             + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+        union = JAGIndex.build(xb, tab, CFG)
+        sharded = ShardedJAGIndex.build(xb, tab, CFG, n_shards=1)
+        _STATE[kind] = (union, sharded, q, filt)
+    return _STATE[kind]
+
+
+def _assert_bitwise(got, want, fields=None, msg=""):
+    for f in fields or want._fields:
+        a, b = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert a.shape == b.shape, (msg, f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f"{msg}:{f}")
+
+
+# ---------------------------------------------------------------------------
+# S=1 bit-identity on the in-process single device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_s1_search_auto_exact_route_bit_identical(kind):
+    union, sharded, q, filt = _setup(kind)
+    want = union.search_auto(q, filt, k=10, ls=32, planner=FORCE_PRE)
+    got = sharded.search_auto(q, filt, k=10, ls=32, planner=FORCE_PRE)
+    _assert_bitwise(got, want, msg=kind)
+
+
+def test_s1_compound_expression_bit_identical():
+    union, sharded, q, _ = _setup(F.LABEL)
+    # rebuild both over a joint table so a compound tree applies
+    rng = np.random.default_rng(7)
+    xb = rng.normal(size=(N, D)).astype(np.float32)
+    labels = rng.integers(0, 4, N).astype(np.int32)
+    vals = rng.uniform(0, 1, N).astype(np.float32)
+    tab = joint_table(F.label_table(labels), F.range_table(vals))
+    union = JAGIndex.build(xb, tab, CFG)
+    sharded = ShardedJAGIndex.build(xb, tab, CFG, n_shards=1)
+    q = (xb[rng.integers(0, N, B)]
+         + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+    expr = (Label(np.full(B, 2)) | Label(np.full(B, 3))) \
+        & Range(np.zeros(B, np.float32), np.full(B, 0.7, np.float32))
+    want = union.search_auto(q, expr, k=10, ls=32, planner=FORCE_PRE)
+    got = sharded.search_auto(q, expr, k=10, ls=32, planner=FORCE_PRE)
+    _assert_bitwise(got, want, msg="compound")
+
+
+def test_s1_graph_route_parity():
+    union, sharded, q, filt = _setup(F.RANGE)
+    want = union.search(q, filt, k=10, ls=32)
+    got = sharded.search(q, filt, k=10, ls=32)
+    # one shard = the same graph, entries, and traversal; the sharded
+    # routes deliberately emit the width-0 vlog (shard-local logs are
+    # id-ambiguous after globalization), so compare everything else
+    _assert_bitwise(got, want,
+                    fields=("ids", "primary", "secondary", "n_expanded",
+                            "n_dist"), msg="graph")
+    assert np.asarray(got.vlog).shape == (B, 0)
+
+
+def test_s1_postfilter_route_parity():
+    union, sharded, q, _ = _setup(F.RANGE)
+    wide = F.range_filters(np.zeros(B, np.float32),
+                           np.full(B, 0.95, np.float32))
+    want = union.executor.postfilter(q, wide, k=10, ls=32, max_iters=64)
+    got = sharded.executor.postfilter(q, wide, k=10, ls=32, max_iters=64)
+    _assert_bitwise(got, want,
+                    fields=("ids", "primary", "secondary", "n_expanded",
+                            "n_dist"), msg="postfilter")
+
+
+def test_shard_convenience_and_unfiltered():
+    union, _, q, filt = _setup(F.RANGE)
+    sh = union.shard(1)
+    assert isinstance(sh, ShardedJAGIndex) and sh.n_shards == 1
+    got = sh.executor.unfiltered(q, k=10, ls=32, max_iters=64)
+    want = union.search_unfiltered(q, k=10, ls=32, max_iters=64)
+    _assert_bitwise(got, want,
+                    fields=("ids", "primary", "secondary"), msg="unfilt")
+    assert shard_index(union, 1).n_shards == 1
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+
+def test_build_validation():
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(30, 4)).astype(np.float32)
+    tab = F.range_table(rng.uniform(0, 1, 30).astype(np.float32))
+    # serve_mesh guards the device count before any row math (this process
+    # sees 1 device; divisibility is asserted in the 8-device subprocess)
+    with pytest.raises(ValueError, match="devices"):
+        ShardedJAGIndex.build(xb, tab, CFG, n_shards=3)
+    with pytest.raises(ValueError, match="pass n_shards"):
+        ShardedJAGIndex.build(xb, tab, CFG)
+
+
+def test_from_shards_validation():
+    rng = np.random.default_rng(1)
+    mk = lambda n: JAGIndex.build(  # noqa: E731
+        rng.normal(size=(n, 4)).astype(np.float32),
+        F.range_table(rng.uniform(0, 1, n).astype(np.float32)), CFG)
+    with pytest.raises(ValueError, match="at least one"):
+        ShardedJAGIndex.from_shards([])
+    with pytest.raises(ValueError, match="same row count"):
+        ShardedJAGIndex.from_shards([mk(20), mk(30)])
+
+
+# ---------------------------------------------------------------------------
+# cost routing at the per-shard shape
+# ---------------------------------------------------------------------------
+
+def _grid_model(n, d, scale=1.0):
+    from repro.cost import CostModel, Observation, fit, phi
+    rng = np.random.default_rng(int(n))
+    obs = []
+    for route, w in (("prefilter", [2.0, 0.5, 0.1, 0.3]),
+                     ("graph", [1.0 * scale, 0.8, -0.3, 0.2]),
+                     ("postfilter", [1.5, 0.7, 0.1, 0.05])):
+        for _ in range(12):
+            f = dict(sel=float(rng.uniform(0.01, 1.0)), n=n, d=d,
+                     ls=int(rng.choice([32, 64])), k=10, n_clauses=1)
+            obs.append(Observation(route, f,
+                                   us=float(np.exp(phi(route, f)
+                                                   @ np.asarray(w)))))
+    m = fit(obs, dict(backend="cpu", shard_shape=[int(n), int(d)]))
+    assert isinstance(m, CostModel)
+    return m
+
+
+def test_sharded_cost_router_predicts_at_per_shard_shape():
+    from repro.cost import InterpolatedCostModel
+    union, sharded, q, filt = _setup(F.RANGE)
+    model = InterpolatedCostModel([_grid_model(100, D),
+                                   _grid_model(10000, D)])
+    sharded.attach_cost_model(model)
+    try:
+        r = sharded.executor.cost_router(k=10, ls=32)
+        assert r is not None
+        assert r.n == sharded.n_loc          # per-shard rows, not union N
+        assert r.route(0.5) in ("prefilter", "graph", "postfilter")
+        # the cost-routed sharded search serves end to end
+        res = sharded.search_auto(q, filt, k=10, ls=32)
+        assert np.asarray(res.ids).shape == (B, 10)
+    finally:
+        sharded.attach_cost_model(None)
+    assert sharded.executor.cost_router(k=10, ls=32) is None
+
+
+# ---------------------------------------------------------------------------
+# the acceptance test: 8 fake devices, union bit-identity, all four kinds
+# ---------------------------------------------------------------------------
+
+def test_sharded_union_bit_identity_subprocess():
+    """Sharded search_auto == single-device union index, bitwise, on 8
+    faked host devices: all four filter kinds + a compound expression."""
+    code = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+assert len(jax.devices()) == 8
+from repro.core import filters as F
+from repro.core.jag import JAGConfig, JAGIndex
+from repro.core.filters import Label, Range, joint_table
+from repro.serve.planner import PlannerConfig
+from repro.serve.sharded import ShardedJAGIndex
+
+N, D, B, S = 320, 8, 6, 8
+CFG = JAGConfig(degree=6, ls_build=8, batch_size=128, cand_pool=16,
+                calib_samples=16, n_seeds=2)
+FORCE_PRE = PlannerConfig(prefilter_max_sel=1.1, postfilter_min_sel=1.2)
+
+def check(name, xb, tab, filt, q):
+    union = JAGIndex.build(xb, tab, CFG)
+    sh = ShardedJAGIndex.build(xb, tab, CFG, n_shards=S)
+    for mode in ("per_query", "batch"):
+        want = union.search_auto(q, filt, k=10, ls=16, planner=FORCE_PRE,
+                                 mode=mode)
+        got = sh.search_auto(q, filt, k=10, ls=16, planner=FORCE_PRE,
+                             mode=mode)
+        for f in want._fields:
+            a = np.asarray(getattr(got, f)); b = np.asarray(getattr(want, f))
+            assert a.shape == b.shape and np.array_equal(a, b), \
+                (name, mode, f, a, b)
+    print("OK", name)
+
+rng = np.random.default_rng(0)
+xb = rng.normal(size=(N, D)).astype(np.float32)
+q = (xb[rng.integers(0, N, B)]
+     + 0.1 * rng.normal(size=(B, D))).astype(np.float32)
+
+check("range", xb, F.range_table(rng.uniform(0, 1, N).astype(np.float32)),
+      F.range_filters(np.zeros(B, np.float32), np.full(B, 0.2, np.float32)),
+      q)
+check("label", xb, F.label_table(rng.integers(0, 5, N).astype(np.int32)),
+      F.label_filters(np.full(B, 2)), q)
+fb = np.zeros((B, 16), bool); fb[:, :3] = True
+check("subset", xb, F.subset_table(rng.random((N, 16)) < 0.5, 16),
+      F.subset_filters(fb, 16), q)
+sat = np.zeros((B, 1 << 8), bool)
+for i in range(B):
+    sat[i, rng.choice(1 << 8, 64, replace=False)] = True
+check("boolean", xb,
+      F.boolean_table(rng.integers(0, 1 << 8, N).astype(np.uint32), 8),
+      F.boolean_filters(sat, 8), q)
+labels = rng.integers(0, 4, N).astype(np.int32)
+vals = rng.uniform(0, 1, N).astype(np.float32)
+expr = (Label(np.full(B, 2)) | Label(np.full(B, 3))) \
+    & Range(np.zeros(B, np.float32), np.full(B, 0.7, np.float32))
+check("compound", xb,
+      joint_table(F.label_table(labels), F.range_table(vals)), expr, q)
+try:
+    ShardedJAGIndex.build(xb[:30], F.range_table(
+        rng.uniform(0, 1, 30).astype(np.float32)), CFG, n_shards=8)
+    raise SystemExit("expected a divisibility ValueError")
+except ValueError as e:
+    assert "split evenly" in str(e), e
+print("SUBPROC_OK")
+'''
+    r = subprocess.run([sys.executable, "-c", code],
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))),
+                       capture_output=True, text=True,
+                       env=dict(os.environ, PYTHONPATH="src"),
+                       timeout=1200)
+    assert "SUBPROC_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
