@@ -69,6 +69,9 @@ def main(argv=None) -> dict:
                     help="write results as JSON (CI artifact)")
     ap.add_argument("--registry", default=None, metavar="DIR",
                     help="also save the fitted model into this registry")
+    ap.add_argument("--audit", action="store_true",
+                    help="stamp repro.analysis.audit per-route gather/"
+                         "collective counts into the JSON artifact")
     args = ap.parse_args(argv)
 
     fast = os.environ.get("REPRO_BENCH_FAST") == "1"
@@ -125,6 +128,10 @@ def main(argv=None) -> dict:
            "fit_stats": model.fit_stats,
            "mixed": {"target_sel": [lo_sel, hi_sel], "n": n, "d": d,
                      "b": b, "k": k, "ls": ls, **mixed}}
+    if args.audit:
+        from repro.analysis.audit import audit_stamp
+        out["audit"] = audit_stamp()
+        print(f"# audit stamp: {len(out['audit'])} routes")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(out, fh, indent=1)

@@ -26,6 +26,9 @@ def main(argv=None) -> None:
                     help="run benchmarks whose name contains this")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (CI artifact)")
+    ap.add_argument("--audit", action="store_true",
+                    help="stamp repro.analysis.audit per-route gather/"
+                         "collective counts into the JSON artifact")
     args = ap.parse_args(argv)
 
     from . import kernels_bench, paper_figs
@@ -51,10 +54,15 @@ def main(argv=None) -> None:
             emit(f"{bench.__name__}/ERROR", 0.0, "see stderr")
     print(f"# total {time.time() - t0:.0f}s, {len(rows)} rows",
           file=sys.stderr)
+    out = {"rows": rows, "total_s": round(time.time() - t0, 1)}
+    if args.audit:
+        from repro.analysis.audit import audit_stamp
+        out["audit"] = audit_stamp()
+        print(f"# audit stamp: {len(out['audit'])} routes",
+              file=sys.stderr)
     if args.json:
         with open(args.json, "w") as fh:
-            json.dump({"rows": rows, "total_s": round(time.time() - t0, 1)},
-                      fh, indent=1)
+            json.dump(out, fh, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Static analysis for the serving stack: `jagcheck`'s two layers.
+
+Seven PRs of serving work accumulated invariants that used to live only in
+docstrings and point tests. This package makes them machine-checked:
+
+* :mod:`repro.analysis.lint` — Layer 1, an AST lint over ``src/repro``
+  enforcing the repo-specific rules JAG001–JAG005 (jit surface, batch-
+  invariant candidate dots, no module-level lru_cache over device buffers,
+  epoch-keyed executor caches, no host syncs under jit) with a
+  config/allowlist in ``pyproject.toml`` ``[tool.jagcheck]``.
+* :mod:`repro.analysis.audit` — Layer 2, a compiled-route auditor: builds
+  a small index, traces every executor route (including the sharded
+  routes on faked devices) to jaxpr + lowered/compiled HLO, and statically
+  asserts the performance contracts — one gather per expansion on fused
+  routes, zero host callbacks / f64 ops, exactly one all-gather per
+  sharded route — emitting a diffable ``AUDIT.json``.
+
+``tools/jagcheck.py`` is the CLI; CI runs both layers on every commit.
+"""
+from .lint import Finding, LintConfig, lint_source, run_lint  # noqa: F401
+from .audit import check_report, run_audit  # noqa: F401

@@ -1,0 +1,473 @@
+"""Layer 2 of `jagcheck`: the compiled-route auditor.
+
+Builds a small index, runs every executor route through the real
+``serve.Executor`` (so the audited programs are exactly the ones the jit
+cache serves), re-lowers each captured ``(key, make, args)`` to jaxpr,
+stablehlo and compiled HLO, and statically asserts the serving stack's
+performance contracts:
+
+* **one gather per expansion** on fused-layout graph routes: inside the
+  beam-search while-loop, the only N-row data gather is the packed
+  ``[vec | norm | attr]`` row fetch (the adjacency fetch is the loop's one
+  int32 neighbor-list gather and is counted separately). Default-layout
+  routes are measured too (vector + norm + attr = 3) — both numbers land
+  in ``AUDIT.json`` so a regression in either direction is diffable.
+* **zero host round-trips**: no ``pure_callback``/``io_callback`` in any
+  route's jaxpr and no callback custom-calls in the lowered programs.
+* **zero f64 ops** anywhere — an accidental float64 promotion doubles
+  every distance matrix's bytes.
+* **exactly one all-gather per sharded route** (and no other collective):
+  the cross-shard merge packs ids/keys/telemetry into one int32
+  ``[B, 3k+2]`` array before the collective, so per-route link traffic is
+  a single ``B*(3k+2)*4``-byte gather over the shard axis — measured with
+  ``launch.hlo_stats`` from the compiled HLO.
+
+The sharded section self-launches a subprocess with 8 faked host devices
+(mirroring ``tests/test_sharded.py``) so the auditing process's device
+count stays untouched. ``run_audit`` returns the report dict that
+``tools/jagcheck.py`` writes as ``AUDIT.json``; ``check_report`` turns it
+into a list of violations (empty = all contracts hold).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# NOTE: jax and repro.* are imported lazily inside functions so the lint
+# layer (pure ast, no jax) stays importable in slim environments.
+
+AUDIT_N, AUDIT_D, AUDIT_B = 256, 8, 4
+AUDIT_K, AUDIT_LS, AUDIT_MI = 5, 16, 32
+SHARD_DEVICES = 8
+
+GRAPH_VARIANTS = [("default", "f32"), ("default", "int8"),
+                  ("fused", "f32"), ("fused", "int8")]
+SHARDED_ROUTES = ("prefilter", "graph", "postfilter", "unfiltered")
+
+
+# ---------------------------------------------------------------------------
+# stablehlo / HLO text analysis
+# ---------------------------------------------------------------------------
+
+def _match_brace(text: str, open_idx: int) -> int:
+    depth = 0
+    for p in range(open_idx, len(text)):
+        if text[p] == "{":
+            depth += 1
+        elif text[p] == "}":
+            depth -= 1
+            if depth == 0:
+                return p
+    return -1
+
+
+def _while_do_regions(text: str) -> List[str]:
+    """The ``do { ... }`` body of every stablehlo.while, nested included."""
+    out = []
+    i = 0
+    while True:
+        j = text.find("stablehlo.while", i)
+        if j < 0:
+            break
+        c = text.find("cond", j)
+        b1 = text.find("{", c) if c >= 0 else -1
+        e1 = _match_brace(text, b1) if b1 >= 0 else -1
+        d = text.find("do", e1) if e1 >= 0 else -1
+        b2 = text.find("{", d) if d >= 0 else -1
+        e2 = _match_brace(text, b2) if b2 >= 0 else -1
+        if e2 >= 0:
+            out.append(text[b2:e2 + 1])
+        i = j + len("stablehlo.while")
+    return out
+
+
+_RE_GATHER_SIG = re.compile(
+    r":\s*\(tensor<([^>]*)>,\s*tensor<([^>]*)>\)\s*->")
+
+
+def _gather_operands(text: str) -> List[str]:
+    """Data-operand type of every stablehlo.gather, e.g. '320x10xf32'.
+
+    Line-based: the op's attribute dict also contains the literal
+    ``#stablehlo.gather<...>`` and colons (``array<i64: 1, 10>``), so the
+    reliable anchor is the trailing ``: (operand types) -> result`` type
+    signature on a line that *defines* a gather.
+    """
+    out = []
+    for line in text.splitlines():
+        if "stablehlo.gather\"" not in line and \
+                "stablehlo.gather(" not in line:
+            continue
+        if "=" not in line.split("stablehlo.gather", 1)[0]:
+            continue  # not a definition line
+        m = _RE_GATHER_SIG.search(line)
+        if m:
+            out.append(m.group(1))
+    return out
+
+
+def _leading_dim(shape: str) -> int:
+    head = shape.split("x", 1)[0]
+    return int(head) if head.isdigit() else -1
+
+
+_RE_FUNC = re.compile(r"func\.func (?:private |public )?@([\w$.\-]+)")
+_RE_CALL = re.compile(r"\bcall @([\w$.\-]+)")
+
+
+def _func_bodies(text: str) -> Dict[str, str]:
+    """Body text of every module-level func (jax outlines repeated
+    subcomputations — ``call @_take_3`` — so gathers the loop performs
+    often live outside the while region's literal text)."""
+    out: Dict[str, str] = {}
+    for m in _RE_FUNC.finditer(text):
+        nl = text.find("\n", m.end())
+        sig = text[m.end():nl if nl > 0 else len(text)].rstrip()
+        if not sig.endswith("{"):
+            continue
+        # the body brace is the LAST '{' on the signature line — arg
+        # attribute dicts ({mhlo.layout_mode = ...}) open earlier ones
+        b = text.rfind("{", m.end(), nl)
+        e = _match_brace(text, b)
+        if e > 0:
+            out[m.group(1)] = text[b:e + 1]
+    return out
+
+
+def _region_gathers(region: str, bodies: Dict[str, str],
+                    _stack: frozenset = frozenset()) -> List[str]:
+    """Gather data-operand types executed by a region, call sites
+    resolved transitively (each call site contributes its callee's
+    gathers once per call)."""
+    ops = _gather_operands(region)
+    for m in _RE_CALL.finditer(region):
+        name = m.group(1)
+        if name in _stack or name not in bodies:
+            continue
+        ops += _region_gathers(bodies[name], bodies, _stack | {name})
+    return ops
+
+
+def _expansion_gathers(stable: str, n_rows: int,
+                       adj_shape: str) -> Optional[int]:
+    """N-row data gathers per iteration of the traversal loop.
+
+    The traversal loop is the innermost while body whose executed gathers
+    (calls resolved) include the adjacency fetch (operand ``adj_shape``,
+    the int32 neighbor-list gather); its other N-row gathers are the
+    per-expansion candidate data fetches — 1 on the packed fused layout,
+    vector+norm+attr on the default split layout. None if no loop
+    performs the adjacency gather (routes without graph traversal: exact
+    scans, merges).
+    """
+    bodies = _func_bodies(stable)
+    best: Optional[Tuple[int, List[str]]] = None
+    for r in _while_do_regions(stable):
+        ops = _region_gathers(r, bodies)
+        if adj_shape in ops and (best is None or len(r) < best[0]):
+            best = (len(r), ops)
+    if best is None:
+        return None
+    return sum(1 for o in best[1]
+               if _leading_dim(o) == n_rows and o != adj_shape)
+
+
+def _count_lines(text: str, pattern: str) -> int:
+    rx = re.compile(pattern)
+    return sum(1 for line in text.splitlines() if rx.search(line))
+
+
+def analyze_entry(fn, args, *, n_rows: int, adj_shape: str) -> Dict:
+    """Lower one captured route to jaxpr/stablehlo/HLO and extract stats."""
+    import jax
+    from ..launch.hlo_stats import (collective_bytes, collective_counts,
+                                    op_histogram)
+    jaxpr = str(jax.make_jaxpr(fn)(*args))
+    lowered = jax.jit(fn).lower(*args)
+    stable = lowered.as_text()
+    compiled = lowered.compile().as_text()
+    ops = _gather_operands(stable)
+    data_ops: Dict[str, int] = {}
+    for o in ops:
+        if _leading_dim(o) == n_rows:
+            data_ops[o] = data_ops.get(o, 0) + 1
+    callbacks = (_count_lines(jaxpr, r"\b(pure|io)_callback\b")
+                 + _count_lines(stable, r"custom_call.*callback")
+                 + _count_lines(compiled, r"custom-call.*callback"))
+    f64 = (_count_lines(jaxpr, r"\bfloat64\b")
+           + _count_lines(stable, r"xf64>|tensor<f64>")
+           + _count_lines(compiled, r"\bf64\["))
+    return {
+        "gathers_total": len(ops),
+        "data_gather_operands": data_ops,
+        "adjacency_gathers": data_ops.get(adj_shape, 0),
+        "gathers_per_expansion": _expansion_gathers(stable, n_rows,
+                                                    adj_shape),
+        "collectives": collective_counts(compiled),
+        "collective_bytes": collective_bytes(compiled),
+        "callbacks": callbacks,
+        "f64_ops": f64,
+        "n_ops": sum(op_histogram(compiled).values()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# route capture (through the real executor cache)
+# ---------------------------------------------------------------------------
+
+def _capture(executor, route_name: str, call) -> Tuple:
+    """Run ``call()`` with the executor's trace hook armed and return the
+    captured (key, make, args) whose route component matches."""
+    executor.trace_log = []
+    try:
+        call()
+        for key, make, args in executor.trace_log:
+            if key[0] == route_name:
+                return key, make, args
+    finally:
+        executor.trace_log = None
+    raise AssertionError(
+        f"route {route_name!r} never reached Executor.run — captured "
+        f"{[k for k, _, _ in executor.trace_log]}")
+
+
+def _dataset(n: int = AUDIT_N, d: int = AUDIT_D, b: int = AUDIT_B):
+    import numpy as np
+    from ..core import filters as F
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(n, d)).astype(np.float32)
+    tab = F.range_table(rng.uniform(0, 1, n).astype(np.float32))
+    filt = F.range_filters(np.zeros(b, np.float32),
+                           np.full(b, 0.3, np.float32))
+    q = (xb[rng.integers(0, n, b)]
+         + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
+    return xb, tab, filt, q
+
+
+def _build_cfg():
+    from ..core.jag import JAGConfig
+    return JAGConfig(degree=6, ls_build=8, batch_size=128, cand_pool=16,
+                     calib_samples=16, n_seeds=2)
+
+
+def audit_single_device() -> Dict:
+    """Audit every single-device executor route/layout/dtype combination."""
+    from ..core.filters import as_filter
+    from ..core.jag import JAGIndex
+    from ..stream import StreamingJAGIndex
+
+    xb, tab, filt, q = _dataset()
+    filt = as_filter(filt)
+    index = JAGIndex.build(xb, tab, _build_cfg())
+    ex = index.executor
+    n, rw = int(index.xb.shape[0]), int(index.graph.shape[1])
+    adj = f"{n}x{rw}xi32"
+    k, ls, mi = AUDIT_K, AUDIT_LS, AUDIT_MI
+
+    routes: Dict[str, Dict] = {}
+
+    def audit(name, route_name, call, executor=ex, n_rows=n,
+              adj_shape=adj):
+        key, make, args = _capture(executor, route_name, call)
+        routes[name] = {"key": [str(c) for c in key],
+                        **analyze_entry(make(), args, n_rows=n_rows,
+                                        adj_shape=adj_shape)}
+
+    audit("prefilter", "prefilter",
+          lambda: ex.prefilter(q, filt, k=k, use_kernel=False))
+    for layout, dtype in GRAPH_VARIANTS:
+        audit(f"graph:{layout}:{dtype}", "graph",
+              lambda layout=layout, dtype=dtype: ex.graph(
+                  q, filt, k=k, ls=ls, max_iters=mi,
+                  layout=layout, dtype=dtype))
+    audit("postfilter", "postfilter",
+          lambda: ex.postfilter(q, filt, k=k, ls=ls, max_iters=mi))
+    audit("unfiltered", "unfiltered",
+          lambda: ex.unfiltered(q, k=k, ls=ls, max_iters=mi))
+
+    # streaming delta + merge over a live delta segment
+    import numpy as np
+    from ..core import filters as F
+    rng = np.random.default_rng(1)
+    stream = StreamingJAGIndex.build(xb, tab, _build_cfg())
+    n_new = 32
+    stream.insert(rng.normal(size=(n_new, AUDIT_D)).astype(np.float32),
+                  F.range_table(rng.uniform(0, 1, n_new).astype(np.float32)))
+    sex = stream.executor
+    base = sex.prefilter(q, filt, k=k, use_kernel=False)
+    delta = sex.delta(q, filt, k=k, use_kernel=False)
+    audit("delta", "delta",
+          lambda: sex.delta(q, filt, k=k, use_kernel=False),
+          executor=sex, n_rows=n_new)
+    audit("merge", "merge", lambda: sex.merge(base, delta, k=k),
+          executor=sex)
+    return {
+        "meta": {"n": n, "d": AUDIT_D, "b": AUDIT_B, "k": k, "ls": ls,
+                 "max_iters": mi, "graph_width": rw, "delta_n": n_new,
+                 "packed_row_width": int(
+                     index.fused_layout("f32").packed.shape[1])},
+        "routes": routes,
+    }
+
+
+def audit_sharded_routes() -> Dict:
+    """Audit the shard_map routes — call only in a process that already
+    sees ``SHARD_DEVICES`` devices (the parent uses ``run_sharded_audit``
+    to fake them in a subprocess)."""
+    import jax
+    from ..core.filters import as_filter
+    from ..serve.sharded import ShardedJAGIndex
+
+    assert len(jax.devices()) >= SHARD_DEVICES, jax.devices()
+    xb, tab, filt, q = _dataset(n=SHARD_DEVICES * 40)
+    filt = as_filter(filt)
+    sh = ShardedJAGIndex.build(xb, tab, _build_cfg(),
+                               n_shards=SHARD_DEVICES)
+    ex = sh.executor
+    n_loc, rw = sh.n_loc, int(sh.graph.shape[2])
+    adj = f"{n_loc}x{rw}xi32"
+    k, ls, mi = AUDIT_K, AUDIT_LS, AUDIT_MI
+    routes: Dict[str, Dict] = {}
+
+    def audit(name, call):
+        key, make, args = _capture(ex, name, call)
+        routes[name] = {"key": [str(c) for c in key],
+                        **analyze_entry(make(), args, n_rows=n_loc,
+                                        adj_shape=adj)}
+
+    audit("prefilter", lambda: ex.prefilter(q, filt, k=k,
+                                            use_kernel=False))
+    audit("graph", lambda: ex.graph(q, filt, k=k, ls=ls, max_iters=mi))
+    audit("postfilter", lambda: ex.postfilter(q, filt, k=k, ls=ls,
+                                              max_iters=mi))
+    audit("unfiltered", lambda: ex.unfiltered(q, k=k, ls=ls, max_iters=mi))
+    return {
+        "meta": {"devices": SHARD_DEVICES, "n_loc": n_loc, "b": AUDIT_B,
+                 "k": k, "ls": ls,
+                 "merge_payload_bytes": AUDIT_B * (3 * k + 2) * 4},
+        "routes": routes,
+    }
+
+
+def audit_stamp() -> Dict:
+    """Compact per-route static facts for stamping into bench artifacts
+    (``benchmarks/run.py --audit`` / ``cost_bench.py --audit``) — perf
+    numbers and the gather/collective counts they were measured under
+    travel in one JSON."""
+    return {name: {"gathers": r["gathers_total"],
+                   "gathers_per_expansion": r["gathers_per_expansion"],
+                   "collectives": r["collectives"]}
+            for name, r in audit_single_device()["routes"].items()}
+
+
+def run_sharded_audit(root: str = ".") -> Dict:
+    """Run :func:`audit_sharded_routes` in a subprocess with faked host
+    devices (XLA_FLAGS must be set before the first jax import, so the
+    auditing process cannot fake them for itself)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count="
+                         f"{SHARD_DEVICES}",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   p for p in (os.path.join(root, "src"),
+                               os.environ.get("PYTHONPATH")) if p))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.audit", "--sharded-child"],
+        cwd=root, capture_output=True, text=True, env=env, timeout=1200)
+    marker = "JAGCHECK_SHARDED_JSON:"
+    for line in r.stdout.splitlines():
+        if line.startswith(marker):
+            return json.loads(line[len(marker):])
+    raise RuntimeError(
+        f"sharded audit subprocess failed (rc={r.returncode}):\n"
+        f"{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+
+
+def run_audit(root: str = ".", sharded: bool = True) -> Dict:
+    """The full audit: single-device routes in-process, sharded routes in
+    a faked-device subprocess. Returns the ``AUDIT.json`` payload."""
+    import jax
+    report = {"backend": jax.default_backend(), **audit_single_device()}
+    if sharded:
+        report["sharded"] = run_sharded_audit(root)
+    report["violations"] = check_report(report)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# the win conditions
+# ---------------------------------------------------------------------------
+
+def check_report(report: Dict) -> List[str]:
+    """Every contract the audit enforces, as human-readable violations."""
+    out: List[str] = []
+    for name, r in report.get("routes", {}).items():
+        if r["callbacks"]:
+            out.append(f"{name}: {r['callbacks']} host callback op(s)")
+        if r["f64_ops"]:
+            out.append(f"{name}: {r['f64_ops']} f64 op(s)")
+        if r["collectives"]:
+            out.append(f"{name}: single-device route contains "
+                       f"collectives {r['collectives']}")
+        gpe = r.get("gathers_per_expansion")
+        if name.startswith("graph:fused") and gpe != 1:
+            out.append(f"{name}: {gpe} gathers per expansion "
+                       f"(fused contract is exactly 1)")
+        if name.startswith("graph:default") and (gpe is None or gpe < 2):
+            out.append(f"{name}: expansion gather count {gpe} — the "
+                       f"split layout fetches >=2 operands, so the "
+                       f"loop parser is miscounting")
+    sh = report.get("sharded")
+    if sh:
+        for name, r in sh.get("routes", {}).items():
+            if r["callbacks"]:
+                out.append(f"sharded/{name}: {r['callbacks']} callback(s)")
+            if r["f64_ops"]:
+                out.append(f"sharded/{name}: {r['f64_ops']} f64 op(s)")
+            if r["collectives"] != {"all-gather": 1}:
+                out.append(
+                    f"sharded/{name}: collectives {r['collectives']} — "
+                    f"the cross-shard merge must be exactly one "
+                    f"all-gather over the shard axis")
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="jagcheck layer 2: compiled-route auditor")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the audit report (AUDIT.json)")
+    ap.add_argument("--root", default=".")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the faked-device sharded section")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help=argparse.SUPPRESS)  # internal subprocess mode
+    args = ap.parse_args(argv)
+    if args.sharded_child:
+        print("JAGCHECK_SHARDED_JSON:"
+              + json.dumps(audit_sharded_routes()), flush=True)
+        return 0
+    report = run_audit(args.root, sharded=not args.no_sharded)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=1)
+    for name, r in report["routes"].items():
+        print(f"audit,{name},gathers={r['gathers_total']},"
+              f"gpe={r['gathers_per_expansion']},"
+              f"collectives={sum(r['collectives'].values())}")
+    for name, r in report.get("sharded", {}).get("routes", {}).items():
+        print(f"audit,sharded/{name},gathers={r['gathers_total']},"
+              f"collectives={r['collectives']}")
+    for v in report["violations"]:
+        print(f"VIOLATION: {v}")
+    print(f"# jagcheck audit: {len(report['violations'])} violation(s)")
+    return 1 if report["violations"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

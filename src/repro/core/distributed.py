@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .beam_search import greedy_search
-from .distances import query_key_fn
+from .distances import gathered_dot, query_key_fn
 from .filters import AttrTable, FilterBatch
 
 
@@ -105,8 +105,12 @@ def make_serve_step(mesh: Mesh, cfg: ShardedServeConfig, attr_kind: str,
             def dist_fn(xq, _norm, ids, q32, q_norm):  # noqa: F811
                 rows = jnp.take(xq, ids, axis=0,
                                 mode="clip").astype(jnp.float32) * scale
+                # gathered_dot, not einsum: the batched-dot lowering of
+                # einsum("bcd,bd->bc") vectorizes its reduction by batch
+                # size, so per-query results drift across query_chunk
+                # regroupings — JAG002 (batch-invariance, PR 3 contract)
                 d2 = (jnp.sum(rows * rows, -1)
-                      - 2.0 * jnp.einsum("bcd,bd->bc", rows, q32)
+                      - 2.0 * gathered_dot(rows, q32)
                       + q_norm[:, None])
                 return jnp.maximum(d2, 0.0)
 

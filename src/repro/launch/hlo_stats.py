@@ -59,6 +59,29 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return dict(out)
 
 
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Number of collective ops per kind (per-device program).
+
+    Same definition-line discipline as :func:`collective_bytes` (operand
+    references and ``-done`` halves are not ops), but counting instances
+    instead of bytes — the analysis auditor asserts exact collective
+    budgets per route (e.g. "exactly one all-gather"), which byte sums
+    can't express.
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _RE_KIND.search(line)
+        if not m:
+            continue
+        kind, suffix = m.groups()
+        if suffix == "-done":
+            continue
+        if "=" not in line[:m.start()]:
+            continue
+        out[kind] += 1
+    return dict(out)
+
+
 def op_histogram(hlo_text: str) -> Dict[str, int]:
     """Rough opcode histogram (fusion-level) for redundancy eyeballing."""
     out: Dict[str, int] = defaultdict(int)

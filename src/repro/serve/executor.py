@@ -71,6 +71,10 @@ class Executor:
         self._engines: dict = {}
         self._samples: dict = {}
         self._cache_epoch: int = self.epoch
+        # analysis hook: when set to a list, run() appends every
+        # (key, make, args) it executes so repro.analysis.audit can
+        # re-lower the exact programs this cache serves. None in serving.
+        self.trace_log: list | None = None
 
     # -- cache plumbing ----------------------------------------------------
     @property
@@ -120,6 +124,8 @@ class Executor:
         epoch (``(epoch,) + key``); rolling the epoch evicts them all.
         """
         self._roll_epoch()
+        if self.trace_log is not None:
+            self.trace_log.append((key, make, args))
         fn = self._cache.get((self._cache_epoch,) + key)
         if fn is None:
             fn = self._cache[(self._cache_epoch,) + key] = jax.jit(make())

@@ -97,6 +97,53 @@ print("SUBPROC_OK", rec)
     assert "SUBPROC_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
 
 
+def test_int8_reg_dist_batch_invariance():
+    """JAG002 fix (analysis PR): the int8_reg in-register distance now
+    uses distances.gathered_dot, so per-query results are BITWISE
+    identical across query_chunk regroupings. The einsum("bcd,bd->bc")
+    it replaced lowers to a batched dot whose reduction vectorization
+    varies with the chunk batch size — exactly the call-site shape this
+    test varies (one 16-query chunk vs two 8-query chunks)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import JAGConfig, JAGIndex, range_table
+    from repro.core.distributed import ShardedServeConfig, make_serve_step
+    from repro.core.quantized import quantize_int8
+    from repro.launch.mesh import mesh_kwargs, set_mesh
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **mesh_kwargs(2))
+    rng = np.random.default_rng(3)
+    n, d, B = 240, 8, 16
+    xb = rng.normal(size=(n, d)).astype(np.float32)
+    vals = rng.uniform(0, 100, n).astype(np.float32)
+    idx = JAGIndex.build(xb, range_table(vals),
+                         JAGConfig(degree=10, ls_build=16, batch_size=128,
+                                   cand_pool=48))
+    xq, scale = quantize_int8(idx.xb)
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    lo = rng.uniform(0, 90, B).astype(np.float32)
+    args = (jnp.asarray(idx.graph)[None], jnp.asarray(xq)[None],
+            jnp.asarray(idx.xb_norm)[None],
+            {"value": jnp.asarray(vals)[None]},
+            jnp.asarray(np.resize(np.atleast_1d(np.asarray(idx.entry)),
+                                  4).astype(np.int32))[None],
+            jnp.asarray(q),
+            {"lo": jnp.asarray(lo), "hi": jnp.asarray(lo + 10)},
+            jnp.asarray(scale))
+    outs = []
+    with set_mesh(mesh):
+        for chunk in (16, 8):  # 1x16 vs 2x8: different GEMM batch sizes
+            step = jax.jit(make_serve_step(
+                mesh, ShardedServeConfig(k=5, ls=24, max_iters=48,
+                                         query_chunk=chunk),
+                "range", "range", variant="int8_reg"))
+            outs.append([np.asarray(x) for x in step(*args)])
+    (i1, p1, s1), (i2, p2, s2) = outs
+    np.testing.assert_array_equal(i1, i2)
+    assert p1.tobytes() == p2.tobytes()   # bitwise, not approx
+    assert s1.tobytes() == s2.tobytes()
+
+
 def test_hlo_collective_parser():
     from repro.launch.hlo_stats import collective_bytes
     txt = """
@@ -110,3 +157,9 @@ def test_hlo_collective_parser():
     assert out["all-gather"] == 64 * 64 * 2
     assert out["collective-permute"] == 2 * 8 * 8 * 4
     assert out["total"] == sum(v for k, v in out.items() if k != "total")
+    from repro.launch.hlo_stats import collective_counts
+    assert collective_counts(txt) == {"all-reduce": 1, "all-gather": 1,
+                                      "collective-permute": 1}
+    # operand references and -done halves are not op instances
+    assert collective_counts("  ROOT %t = f32[4]{0} tuple(%all-gather.1)\n"
+                             "  %d = f32[4]{0} all-gather-done(%s)\n") == {}

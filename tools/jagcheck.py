@@ -1,0 +1,74 @@
+"""jagcheck: the repo's two-layer static-analysis gate.
+
+Usage: python tools/jagcheck.py [--lint-only | --audit-only]
+                                [--no-sharded] [--json AUDIT.json]
+
+Layer 1 (repro.analysis.lint) AST-lints ``src/repro`` against the
+repo-specific rules JAG001–JAG005, with the config/allowlist in
+``pyproject.toml`` ``[tool.jagcheck]``. Layer 2 (repro.analysis.audit)
+builds a small index and re-lowers every executor route to assert the
+compiled-program contracts (gather/collective/callback/f64 budgets),
+writing the diffable ``AUDIT.json``.
+
+Exit status is non-zero on any unjustified lint finding, configuration
+error (reason-less or stale allowlist entry), or audit violation — the
+CI ``static-analysis`` stage gates on it.
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.analysis.lint import run_lint  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="skip the compiled-route auditor")
+    ap.add_argument("--audit-only", action="store_true",
+                    help="skip the AST lint")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the faked-device sharded audit section")
+    ap.add_argument("--json", default="AUDIT.json", metavar="PATH",
+                    help="where to write the audit report")
+    args = ap.parse_args(argv)
+    failed = False
+
+    if not args.audit_only:
+        report = run_lint(args.root)
+        for f in report.findings + report.config_errors:
+            print(f)
+        for f, ent in report.suppressed:
+            print(f"# allowed {f.rule} {f.path}:{f.line} — {ent.reason}")
+        n = len(report.findings) + len(report.config_errors)
+        print(f"# jagcheck lint: {n} finding(s), "
+              f"{len(report.suppressed)} allowlisted")
+        failed |= not report.ok
+
+    if not args.lint_only:
+        from repro.analysis.audit import run_audit
+        audit = run_audit(args.root, sharded=not args.no_sharded)
+        with open(args.json, "w") as fh:
+            json.dump(audit, fh, indent=1)
+        for name, r in audit["routes"].items():
+            print(f"# audit {name}: gathers={r['gathers_total']} "
+                  f"gpe={r['gathers_per_expansion']} "
+                  f"collectives={r['collectives']}")
+        for name, r in audit.get("sharded", {}).get("routes", {}).items():
+            print(f"# audit sharded/{name}: "
+                  f"gathers={r['gathers_total']} "
+                  f"collectives={r['collectives']}")
+        for v in audit["violations"]:
+            print(f"VIOLATION: {v}")
+        print(f"# jagcheck audit: {len(audit['violations'])} violation(s) "
+              f"-> {args.json}")
+        failed |= bool(audit["violations"])
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
