@@ -1,0 +1,150 @@
+"""Telemetry benchmark: tracing overhead bar + drift-driven re-calibration.
+
+Stage 1 is the overhead bar: planner_bench's MIXED band (half the batch
+at ~0.1% selectivity, half at ~90%) served through ``search_auto`` with
+telemetry detached vs attached, on warm executor caches. CI asserts
+QPS(on) >= 0.95 x QPS(off) — the tentpole's <5% tracing budget.
+
+Stage 2 is the drift scenario: the cost model is calibrated on a
+deliberately SMALLER grid than serving (lower N, small calibration
+batch — the "index grew past its calibration" regime the ROADMAP's
+re-calibration item names), then the mixed band plus a selectivity sweep
+is served with telemetry on. The traced window feeds
+``repro.obs.recal.recalibrate`` (drift-gated, hysteresis-gated); the
+artifact records stale vs refit held-out median relative error and CI
+asserts the refit's error is strictly below the stale model's.
+
+Usage: PYTHONPATH=src python -m benchmarks.obs_bench [--json PATH]
+                                                     [--traces PATH]
+Env:   REPRO_BENCH_FAST=1 -> small shapes (CI smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> dict:
+    from repro.core import JAGConfig, JAGIndex, range_filters, range_table
+    from repro.cost import fit, run_calibration
+    from repro.cost.calibrate import synth_dataset, time_route
+    from repro.obs import Telemetry, recalibrate
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (CI artifact)")
+    ap.add_argument("--traces", default=None, metavar="PATH",
+                    help="dump the served trace window as JSONL "
+                         "(jagstat input)")
+    args = ap.parse_args(argv)
+
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    d = 16
+    b = 32 if fast else 64
+    k, ls = 10, 32 if fast else 64
+    serve_n = 4000 if fast else 20000
+    # the STALE grid: tops out well below the serving N and measures with a
+    # small calibration batch — per-query overhead amortizes differently at
+    # serving batch shapes, so the extrapolated predictions genuinely drift
+    cal_ns = (500, 1000) if fast else (2000, 5000)
+    drift_threshold = 0.25
+
+    t0 = time.time()
+    cal = run_calibration(ns=cal_ns, ds=(d,),
+                          sels=(0.001, 0.01, 0.1, 0.5, 0.9), lss=(ls,),
+                          k=k, b=8, delta_ns=(), warmup=1, repeats=2,
+                          include_streaming=False, verbose=True)
+    stale = fit(cal.observations, cal.meta)
+    print(f"# stale calibration: {len(cal.observations)} obs at "
+          f"n<={max(cal_ns)} in {time.time() - t0:.0f}s")
+
+    # serving index: planner_bench's recipe, at N past the grid
+    xb, vals, q = synth_dataset(serve_n, d, b, seed=0)
+    cfg = JAGConfig(degree=16 if fast else 32, ls_build=32 if fast else 64,
+                    batch_size=256, cand_pool=64 if fast else 192,
+                    calib_samples=128)
+    index = JAGIndex.build(xb, range_table(vals), cfg)
+    index.attach_cost_model(stale, metric="us")
+
+    lo_sel, hi_sel = 0.001, 0.9
+    his = np.where(np.arange(b) % 2 == 0, lo_sel, hi_sel).astype(np.float32)
+    mixed = range_filters(np.zeros(b, np.float32), his)
+
+    # ---- stage 1: tracing overhead on the mixed band (warm caches) -------
+    reps = 5 if fast else 7
+    _, dt_off = time_route(lambda: index.search_auto(q, mixed, k=k, ls=ls),
+                           warmup=2, repeats=reps)
+    tel = index.attach_telemetry(Telemetry(
+        capacity=16384, drift_threshold=drift_threshold))
+    _, dt_on = time_route(lambda: index.search_auto(q, mixed, k=k, ls=ls),
+                          warmup=2, repeats=reps)
+    qps_off, qps_on = b / dt_off, b / dt_on
+    ratio = qps_on / qps_off
+    print(f"mixed band: qps_off={qps_off:.1f} qps_on={qps_on:.1f} "
+          f"ratio={ratio:.3f}")
+
+    # ---- stage 2: serve a trace window, detect drift, re-calibrate -------
+    tel.traces.clear()
+    sweep = (0.001, 0.01, 0.1, 0.5, 0.9)
+    for _rep in range(3 if fast else 5):
+        for s in sweep:
+            fs = range_filters(np.zeros(b, np.float32),
+                               np.full(b, s, np.float32))
+            index.search_auto(q, fs, k=k, ls=ls)
+        index.search_auto(q, mixed, k=k, ls=ls)
+    window = tel.traces.window()
+    drift = tel.drift_status(window=len(window))
+    print(f"# window: {len(window)} traces; {drift.summary()}")
+
+    forced = False
+    rep = recalibrate(stale, window, metric="us", min_traces=64,
+                      drift_threshold=drift_threshold)
+    if not rep.swapped and rep.reason.startswith("no drift"):
+        # the scenario is only *expected* to drift; keep the artifact
+        # honest if a runner's timings happen not to
+        forced = True
+        rep = recalibrate(stale, window, metric="us", min_traces=64,
+                          drift_threshold=drift_threshold,
+                          require_drift=False)
+    print(f"# recal: swapped={rep.swapped} forced={forced} "
+          f"stale_err={rep.stale_err} refit_err={rep.refit_err} "
+          f"({rep.reason})")
+    if rep.swapped:
+        index.attach_cost_model(rep.model, metric="us")
+
+    if args.traces:
+        n_dumped = tel.traces.dump_jsonl(args.traces)
+        print(f"# trace dump: {n_dumped} records -> {args.traces}")
+
+    out = {
+        "fast": fast,
+        "shape": {"n": serve_n, "d": d, "b": b, "k": k, "ls": ls,
+                  "cal_ns": list(cal_ns)},
+        "overhead": {"qps_off": round(qps_off, 1),
+                     "qps_on": round(qps_on, 1),
+                     "ratio": round(ratio, 4)},
+        "window": {"n_traces": len(window),
+                   "dropped": tel.traces.dropped,
+                   "delta_scan_fraction": tel.delta_scan_fraction(),
+                   "jit_misses": tel.jit_misses()},
+        "drift": {"median_rel_err": drift.median_rel_err,
+                  "drifted": drift.drifted,
+                  "threshold": drift.threshold},
+        "recal": {"swapped": rep.swapped, "forced": forced,
+                  "reason": rep.reason,
+                  "stale_err": rep.stale_err, "refit_err": rep.refit_err,
+                  "n_train": rep.n_train, "n_holdout": rep.n_holdout},
+        "metrics": tel.metrics.snapshot(),
+    }
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main()

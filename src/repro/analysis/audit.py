@@ -263,6 +263,12 @@ def audit_single_device() -> Dict:
     xb, tab, filt, q = _dataset()
     filt = as_filter(filt)
     index = JAGIndex.build(xb, tab, _build_cfg())
+    # audit WITH telemetry attached (and exercised once): the tentpole
+    # contract is that tracing is host-side only, so every program
+    # captured below must meet the same zero-callback/collective budgets
+    from ..obs import Telemetry
+    index.attach_telemetry(Telemetry())
+    index.search_auto(q, filt, k=AUDIT_K, ls=AUDIT_LS)
     ex = index.executor
     n, rw = int(index.xb.shape[0]), int(index.graph.shape[1])
     adj = f"{n}x{rw}xi32"
@@ -294,9 +300,11 @@ def audit_single_device() -> Dict:
     from ..core import filters as F
     rng = np.random.default_rng(1)
     stream = StreamingJAGIndex.build(xb, tab, _build_cfg())
+    stream.attach_telemetry(Telemetry())
     n_new = 32
     stream.insert(rng.normal(size=(n_new, AUDIT_D)).astype(np.float32),
                   F.range_table(rng.uniform(0, 1, n_new).astype(np.float32)))
+    stream.search_auto(q, filt, k=AUDIT_K, ls=AUDIT_LS)
     sex = stream.executor
     base = sex.prefilter(q, filt, k=k, use_kernel=False)
     delta = sex.delta(q, filt, k=k, use_kernel=False)
@@ -308,6 +316,7 @@ def audit_single_device() -> Dict:
     return {
         "meta": {"n": n, "d": AUDIT_D, "b": AUDIT_B, "k": k, "ls": ls,
                  "max_iters": mi, "graph_width": rw, "delta_n": n_new,
+                 "telemetry": True,
                  "packed_row_width": int(
                      index.fused_layout("f32").packed.shape[1])},
         "routes": routes,
@@ -327,6 +336,11 @@ def audit_sharded_routes() -> Dict:
     filt = as_filter(filt)
     sh = ShardedJAGIndex.build(xb, tab, _build_cfg(),
                                n_shards=SHARD_DEVICES)
+    # same telemetry-attached contract as the single-device audit: the
+    # shard_map routes must keep their one-all-gather budget with tracing on
+    from ..obs import Telemetry
+    sh.attach_telemetry(Telemetry())
+    sh.search_auto(q, filt, k=AUDIT_K, ls=AUDIT_LS)
     ex = sh.executor
     n_loc, rw = sh.n_loc, int(sh.graph.shape[2])
     adj = f"{n_loc}x{rw}xi32"
@@ -347,7 +361,7 @@ def audit_sharded_routes() -> Dict:
     audit("unfiltered", lambda: ex.unfiltered(q, k=k, ls=ls, max_iters=mi))
     return {
         "meta": {"devices": SHARD_DEVICES, "n_loc": n_loc, "b": AUDIT_B,
-                 "k": k, "ls": ls,
+                 "k": k, "ls": ls, "telemetry": True,
                  "merge_payload_bytes": AUDIT_B * (3 * k + 2) * 4},
         "routes": routes,
     }

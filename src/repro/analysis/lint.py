@@ -24,6 +24,13 @@ could silently break:
   JAG005  no ``np.asarray`` / ``.item()`` / ``float(x)`` host syncs inside
           functions traced by ``jax.jit`` (decorated, lexically wrapped,
           or returned by an executor ``make()`` factory).
+  JAG006  no telemetry host work inside jit-traced functions — PR 9's
+          observability contract: ``time.*`` timestamps constant-fold at
+          trace time (a compiled route would report its tracing wall
+          clock forever), and telemetry-object mutations (ring-buffer
+          ``append``, histogram ``observe``, counter ``inc``, trace
+          ``record*``) are host state that must only be touched AFTER the
+          route returns, in the dispatch/search_auto wrappers.
 
 Diagnostics are ``path:line: CODE message``. The config and allowlist live
 in ``pyproject.toml`` under ``[tool.jagcheck]``; every allowlist entry
@@ -50,6 +57,7 @@ RULES = {
     "JAG003": "module-level lru_cache can pin device buffers process-wide",
     "JAG004": "cache insertion key lacks an epoch component",
     "JAG005": "host sync inside a jit-traced function",
+    "JAG006": "telemetry host work inside a jit-traced function",
     # meta-diagnostics about the allowlist itself
     "JAGCFG": "jagcheck configuration problem",
 }
@@ -390,6 +398,83 @@ def _jag005(tree: ast.AST, path: str) -> List[Finding]:
     return out
 
 
+_JAG006_TIMERS = ("time.time", "time.perf_counter", "time.monotonic",
+                  "time.time_ns", "time.perf_counter_ns",
+                  "time.monotonic_ns", "perf_counter", "monotonic")
+_JAG006_MUTATORS = ("append", "observe", "inc", "record", "record_call")
+
+
+def _jag006_chain(node: ast.AST) -> str:
+    """Dotted chain like ``_dotted`` but seeing THROUGH calls.
+
+    ``tel.metrics.counter("x").inc`` -> ``tel.metrics.counter.inc`` —
+    registry accessors return the mutated object, so the owner test must
+    not stop at the intervening ``Call`` node.
+    """
+    parts: List[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            break
+        else:
+            break
+    return ".".join(reversed(parts))
+
+
+def _jag006_owner_is_telemetry(chain: str) -> bool:
+    """True when a dotted owner chain names a telemetry-ish object.
+
+    Segments before the final attribute are checked: ``tel`` exactly, or
+    anything containing ``telemetry``/``metric``/``trace`` — matching the
+    ``repro.obs`` surface (Telemetry, TraceBuffer, MetricsRegistry) and
+    the obvious local-variable spellings. ``trace_log`` is exempt: that
+    is the executor's host-side audit hook, which lives in ``run()``
+    (never traced) and predates the telemetry subsystem.
+    """
+    for seg in chain.lower().split(".")[:-1]:
+        if seg == "trace_log":
+            continue
+        if seg == "tel" or "telemetry" in seg or "metric" in seg \
+                or "trace" in seg:
+            return True
+    return False
+
+
+def _jag006(tree: ast.AST, path: str) -> List[Finding]:
+    vis = _JitRoots()
+    vis.visit(tree)
+    out = []
+    seen = set()
+    for root in vis.roots:
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call) or node.lineno in seen:
+                continue
+            fn = _dotted(node.func)
+            what = None
+            if fn in _JAG006_TIMERS:
+                what = (f"{fn}() takes a host timestamp — under jit it "
+                        "constant-folds at trace time; time in the "
+                        "host-side wrapper around the route instead")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _JAG006_MUTATORS \
+                    and _jag006_owner_is_telemetry(
+                        fn or _jag006_chain(node.func)):
+                what = (f"telemetry mutation "
+                        f"{fn or _jag006_chain(node.func)}() — ring "
+                        "buffers and "
+                        "metric registries are host state; record after "
+                        "the compiled route returns (repro.obs contract)")
+            if what:
+                seen.add(node.lineno)
+                out.append(Finding("JAG006", path, node.lineno, what))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
@@ -407,6 +492,7 @@ def lint_source(src: str, path: str,
     out += _jag003(tree, path)
     out += _jag004(tree, path)
     out += _jag005(tree, path)
+    out += _jag006(tree, path)
     return sorted(out, key=lambda f: (f.path, f.line, f.rule))
 
 

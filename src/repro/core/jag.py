@@ -14,8 +14,10 @@ dispatched as route-group sub-batches by ``serve.dispatch``).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -123,6 +125,7 @@ class JAGIndex:
         self._q8 = None                      # (codes, scale, norms) cache
         self.cost_model = None               # repro.cost.CostModel | None
         self.cost_metric = "us"              # routing objective: us | n_dist
+        self.telemetry = None                # repro.obs.Telemetry | None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -204,6 +207,31 @@ class JAGIndex:
         self.cost_model = model
         self.cost_metric = metric
 
+    def attach_telemetry(self, telemetry=...):
+        """Attach (or detach, with None) a ``repro.obs.Telemetry``.
+
+        With telemetry attached, every :meth:`search_auto` call records
+        one per-query :class:`~repro.obs.trace.TraceRecord` (band,
+        realized route, selectivity, predicted costs, wall-clock us,
+        n_dist/n_expanded) into the telemetry's ring buffer and ticks its
+        route counters/latency histograms; the executor additionally
+        reports jit-cache misses and epoch rolls. All of it happens on
+        the host after routes return — compiled programs are unchanged
+        (the audit runs with telemetry attached to prove it).
+
+        Called with no argument a default ``Telemetry()`` is created.
+        Returns the attached telemetry (None on detach) so
+        ``tel = index.attach_telemetry()`` reads naturally.
+        """
+        if telemetry is ...:
+            from ..obs import Telemetry
+            telemetry = Telemetry()
+        self.telemetry = telemetry
+        ex = self.executor
+        ex.miss_hook = None if telemetry is None else telemetry.on_executor_miss
+        ex.roll_hook = None if telemetry is None else telemetry.on_epoch_roll
+        return telemetry
+
     # -- query (Algorithm 2) ------------------------------------------------
     def search(self, queries, filt, k: int = 10,
                ls: int = 64, max_iters: int = 0,
@@ -265,7 +293,10 @@ class JAGIndex:
         variant (packed fused rows and/or int8 lanes) in either mode.
         ``planner`` overrides the ``PlannerConfig`` thresholds;
         ``return_plan=True`` returns ``(result, plan)`` — a ``PerQueryPlan``
-        reporting the per-group decisions, or a whole-batch ``Plan``.
+        reporting the per-group decisions, or a whole-batch ``Plan``;
+        either plan's ``realized`` field carries the route variant that
+        actually executed (e.g. ``graph[fused,int8]``; the streaming
+        subclass appends ``+delta`` when the delta segment was merged).
 
         When a calibrated cost model is attached
         (:meth:`attach_cost_model`), routing decisions come from the
@@ -274,8 +305,9 @@ class JAGIndex:
         reproduced exactly. An explicit ``planner=`` override always wins
         over the cost model — forced-route configs stay forced.
         """
-        from ..serve.dispatch import dispatch_per_query, run_route
-        from ..serve.planner import (PlannerConfig, plan as _plan,
+        from ..serve.dispatch import (dispatch_per_query, route_descriptor,
+                                      run_route)
+        from ..serve.planner import (GroupPlan, PlannerConfig, plan as _plan,
                                      plan_per_query)
         filt = as_filter(filt)
         cfg = planner or PlannerConfig()
@@ -285,20 +317,48 @@ class JAGIndex:
         # an attached cost model must never shadow it
         router = (None if planner is not None
                   else self.executor.cost_router(k=k, ls=ls, filt=filt))
+        tel = getattr(self, "telemetry", None)
+        if tel is not None and not tel.enabled:
+            tel = None
+        # telemetry tap: dispatch blocks on each group and hands back
+        # (group, result, wall seconds) — all host-side, post-execution
+        timed = [] if tel is not None else None
+        on_group = (None if timed is None
+                    else lambda g, r, s: timed.append((g, r, s)))
         if mode == "per_query":
             p = plan_per_query(filt, self.attr, cfg, executor=self.executor,
                                router=router)
             res = dispatch_per_query(self.executor, queries, filt, p, k=k,
                                      ls=ls, max_iters=mi, layout=layout,
-                                     dtype=dtype)
+                                     dtype=dtype, on_group=on_group)
+            p = p._replace(realized=tuple(
+                route_descriptor(r, layout, dtype) for r in p.routes))
         elif mode == "batch":
             p = _plan(filt, self.attr, cfg, executor=self.executor,
                       router=router)
-            res = run_route(self.executor, p.route, queries, filt, k=k,
-                            ls=ls, max_iters=mi, layout=layout, dtype=dtype)
+            if timed is None:
+                res = run_route(self.executor, p.route, queries, filt, k=k,
+                                ls=ls, max_iters=mi, layout=layout,
+                                dtype=dtype)
+            else:
+                t0 = time.perf_counter()
+                res = jax.block_until_ready(
+                    run_route(self.executor, p.route, queries, filt, k=k,
+                              ls=ls, max_iters=mi, layout=layout,
+                              dtype=dtype))
+                ids = np.arange(np.asarray(p.selectivity).size, dtype=np.int32)
+                timed.append((GroupPlan(p.route, ids, p.batch_selectivity),
+                              res, time.perf_counter() - t0))
+            p = p._replace(realized=route_descriptor(p.route, layout, dtype))
         else:
             raise ValueError(f"mode must be 'per_query' or 'batch', "
                              f"got {mode!r}")
+        if timed:
+            tel.record_call(
+                self, p,
+                [(g.route, route_descriptor(g.route, layout, dtype),
+                  g.ids, r, s) for (g, r, s) in timed],
+                k=k, ls=ls, router=router, filt=filt, mode=mode)
         return (res, p) if return_plan else res
 
     # -- multi-device serving (serve/sharded.py) ----------------------------

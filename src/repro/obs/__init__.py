@@ -1,0 +1,29 @@
+"""Serving telemetry: per-query traces, route metrics, drift-driven recal.
+
+Attach to any index with ``index.attach_telemetry()`` (off by default,
+detach with ``attach_telemetry(None)``).  Everything is host-side and
+post-execution — compiled routes are bit-identical with telemetry on,
+which rule JAG006 and the compiled-route auditor enforce statically.
+"""
+from .drift import DriftReport, detect_drift, relative_error
+from .metrics import Counter, Histogram, MetricsRegistry
+from .recal import RecalReport, heldout_error, observations_from_traces, recalibrate
+from .telemetry import Telemetry
+from .trace import TraceBuffer, TraceRecord, load_jsonl
+
+__all__ = [
+    "Counter",
+    "DriftReport",
+    "Histogram",
+    "MetricsRegistry",
+    "RecalReport",
+    "Telemetry",
+    "TraceBuffer",
+    "TraceRecord",
+    "detect_drift",
+    "heldout_error",
+    "load_jsonl",
+    "observations_from_traces",
+    "recalibrate",
+    "relative_error",
+]

@@ -35,6 +35,8 @@ principle tile low-order float bits differently per batch size.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -43,7 +45,21 @@ from ..core.beam_search import SearchResult
 from .planner import PerQueryPlan
 
 __all__ = ["dispatch_per_query", "fold_topk", "merge_topk", "regroup",
-           "run_route"]
+           "route_descriptor", "run_route"]
+
+
+def route_descriptor(route: str, layout: str = "default",
+                     dtype: str = "f32") -> str:
+    """The realized-route name: which compiled variant actually serves.
+
+    Only the graph route has serving variants (layout x dtype); the other
+    routes ignore those options, so their descriptor is the band name —
+    ``route_descriptor("graph", "fused", "int8") == "graph[fused,int8]"``
+    and everything at the defaults collapses back to the plain name.
+    """
+    if route == "graph" and (layout != "default" or dtype != "f32"):
+        return f"graph[{layout},{dtype}]"
+    return route
 
 
 def run_route(executor, route: str, queries, filt, *, k: int,
@@ -140,8 +156,8 @@ def regroup(parts, groups, batch: int) -> SearchResult:
 
 def dispatch_per_query(executor, queries, filt,
                        pq: PerQueryPlan, *, k: int, ls: int, max_iters: int,
-                       layout: str = "default",
-                       dtype: str = "f32") -> SearchResult:
+                       layout: str = "default", dtype: str = "f32",
+                       on_group=None) -> SearchResult:
     """Run each route group through its executor route; regroup per query.
 
     Each group's sub-batch shape keys its own executor compilation, so a
@@ -149,14 +165,28 @@ def dispatch_per_query(executor, queries, filt,
     batch shape would. Compound expressions slice per group through
     ``FilterExpr.take`` (every leaf's lanes gathered in lockstep), so a
     group sees exactly its queries' filter lanes regardless of tree shape.
+
+    ``on_group(group, result, wall_seconds)`` is the telemetry tap: when
+    set, each group's route is blocked on (``jax.block_until_ready``) and
+    wall-timed on the host — timestamps never enter the compiled routes
+    (JAG006). Off (None), nothing blocks and dispatch is unchanged.
     """
     q = jnp.asarray(queries)
+
+    def _run(group, q_g, f_g):
+        if on_group is None:
+            return run_route(executor, group.route, q_g, f_g, k=k, ls=ls,
+                             max_iters=max_iters, layout=layout, dtype=dtype)
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(
+            run_route(executor, group.route, q_g, f_g, k=k, ls=ls,
+                      max_iters=max_iters, layout=layout, dtype=dtype))
+        on_group(group, res, time.perf_counter() - t0)
+        return res
+
     if len(pq.groups) == 1:      # no split -> no gather/scatter round-trip
-        return run_route(executor, pq.groups[0].route, q, filt, k=k, ls=ls,
-                         max_iters=max_iters, layout=layout, dtype=dtype)
-    parts = [run_route(executor, g.route,
-                       jnp.take(q, jnp.asarray(g.ids), axis=0),
-                       filt.take(g.ids), k=k, ls=ls, max_iters=max_iters,
-                       layout=layout, dtype=dtype)
+        return _run(pq.groups[0], q, filt)
+    parts = [_run(g, jnp.take(q, jnp.asarray(g.ids), axis=0),
+                  filt.take(g.ids))
              for g in pq.groups]
     return regroup(parts, pq.groups, q.shape[0])

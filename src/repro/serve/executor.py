@@ -75,6 +75,11 @@ class Executor:
         # (key, make, args) it executes so repro.analysis.audit can
         # re-lower the exact programs this cache serves. None in serving.
         self.trace_log: list | None = None
+        # telemetry hooks (repro.obs): miss_hook(epoch_key) fires once
+        # per distinct compiled cache entry, roll_hook(epoch) once per
+        # epoch-driven cache eviction. Host-side only — never traced.
+        self.miss_hook: Callable | None = None
+        self.roll_hook: Callable | None = None
 
     # -- cache plumbing ----------------------------------------------------
     @property
@@ -96,6 +101,8 @@ class Executor:
             self._samples.clear()
             self._engines.clear()
             self._cache_epoch = e
+            if self.roll_hook is not None:
+                self.roll_hook(e)
 
     def sample_ids(self, n: int, n_samples: int, seed: int = 0):
         """Planner probe rows, cached per executor (so per index).
@@ -126,9 +133,12 @@ class Executor:
         self._roll_epoch()
         if self.trace_log is not None:
             self.trace_log.append((key, make, args))
-        fn = self._cache.get((self._cache_epoch,) + key)
+        epoch_key = (self._cache_epoch,) + key
+        fn = self._cache.get(epoch_key)
         if fn is None:
-            fn = self._cache[(self._cache_epoch,) + key] = jax.jit(make())
+            if self.miss_hook is not None:
+                self.miss_hook(epoch_key)
+            fn = self._cache[epoch_key] = jax.jit(make())
         return fn(*args)
 
     def cache_keys(self, full: bool = False) -> Tuple:

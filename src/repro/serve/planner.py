@@ -111,6 +111,11 @@ class Plan(NamedTuple):
     # static thresholds
     costs: Optional[Dict[str, float]] = None
     cost_metric: Optional[str] = None    # "us" | "n_dist" | None (static)
+    # the route variant that actually executed (``search_auto`` stamps it
+    # post-dispatch): a dispatch.route_descriptor string, e.g.
+    # "graph[fused,int8]" or "prefilter+delta". None when the plan never
+    # ran (planner-only construction).
+    realized: Optional[str] = None
 
 
 class GroupPlan(NamedTuple):
@@ -138,6 +143,10 @@ class PerQueryPlan(NamedTuple):
     # static thresholds
     costs: Optional[Dict[str, float]] = None
     cost_metric: Optional[str] = None    # "us" | "n_dist" | None (static)
+    # per-query realized route descriptors (len B), stamped by
+    # ``search_auto`` after dispatch so traces/explain agree with what
+    # executed. None when the plan never ran.
+    realized: Optional[Tuple[str, ...]] = None
 
     @property
     def route(self) -> str:
@@ -411,11 +420,34 @@ def plan_per_query(filt, table: AttrTable,
                         router.costs(batch_sel), router.metric)
 
 
+def _executed_note(p) -> str:
+    """Realized-route summary when it differs from the planned band names.
+
+    Empty when the plan never ran (``realized is None``) or execution was
+    exactly the planned route (default layout, no delta) — ``explain``
+    stays byte-stable for every pre-existing call site.
+    """
+    realized = getattr(p, "realized", None)
+    if realized is None:
+        return ""
+    if isinstance(realized, str):
+        return "" if realized == p.route else realized
+    if tuple(realized) == tuple(getattr(p, "routes", ())):
+        return ""
+    counts: Dict[str, int] = {}
+    for name in realized:
+        counts[name] = counts.get(name, 0) + 1
+    return " ".join(f"{name}:{c}" for name, c in counts.items())
+
+
 def explain(p, cfg: PlannerConfig = PlannerConfig(), filt=None) -> str:
     """One-line human-readable routing rationale (benchmarks / logs).
 
     Pass the planned ``filt`` to prepend the filter expression, e.g.
-    ``filter=(label=3 & range[0,0.5])``.
+    ``filter=(label=3 & range[0,0.5])``. Plans returned by
+    ``search_auto(return_plan=True)`` carry the realized per-query route
+    (serving variant / delta suffix included); when that differs from the
+    planned band names, an ``executed[...]`` summary is appended.
     """
     head = f"route={p.route} sel~{p.batch_selectivity:.4f}"
     if filt is not None:
@@ -423,6 +455,9 @@ def explain(p, cfg: PlannerConfig = PlannerConfig(), filt=None) -> str:
     if isinstance(p, PerQueryPlan):
         split = " ".join(f"{g.route}:{g.ids.size}" for g in p.groups)
         head += f" [{split}]"
+    executed = _executed_note(p)
+    if executed:
+        head += f" executed[{executed}]"
     if p.costs is not None:
         unit = {"us": "us", "n_dist": "DC"}.get(p.cost_metric,
                                                 p.cost_metric or "")

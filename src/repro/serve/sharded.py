@@ -316,6 +316,7 @@ class ShardedJAGIndex:
         self._executor = None
         self.cost_model = None
         self.cost_metric = "us"
+        self.telemetry = None
         if attr.n != self.n_shards * self.n_loc:
             raise ValueError(
                 f"union attr table has {attr.n} rows, shards carry "
@@ -388,11 +389,14 @@ class ShardedJAGIndex:
             self._executor = ShardedExecutor(self)
         return self._executor
 
-    # search_auto/attach_cost_model run the single-device implementations
-    # verbatim: they only touch self.executor / self.attr / self.cost_*,
-    # so the sharded index IS a drop-in behind the public surface
+    # search_auto/attach_cost_model/attach_telemetry run the single-device
+    # implementations verbatim: they only touch self.executor / self.attr /
+    # self.cost_* / self.telemetry, so the sharded index IS a drop-in
+    # behind the public surface. Telemetry traces record the per-shard
+    # view (n = n_loc, shard = [S, n_loc]) — predictions are per-shard too.
     search_auto = JAGIndex.search_auto
     attach_cost_model = JAGIndex.attach_cost_model
+    attach_telemetry = JAGIndex.attach_telemetry
 
     def search(self, queries, filt, k: int = 10, ls: int = 64,
                max_iters: int = 0) -> SearchResult:

@@ -69,6 +69,9 @@ class StreamingJAGIndex:
         # from whatever the base archive carried
         self.cost_model = base.cost_model
         self.cost_metric = base.cost_metric
+        # telemetry lives on the WRAPPER too (same compaction-survival
+        # argument) and hooks into the wrapper's epoch-aware executor
+        self.telemetry = None
         self.query_horizon = int(query_horizon)
         self.delta_tax_us = 0.0      # predicted delta-scan us served so far
         self._last_k = 10            # most recent served k (merge-tax term)
@@ -160,6 +163,14 @@ class StreamingJAGIndex:
         WRAPPER's model (validation shared with the base method) — the
         base index is untouched, so compaction can't drop it."""
         JAGIndex.attach_cost_model(self, model, metric)
+
+    def attach_telemetry(self, telemetry=...):
+        """Attach (or detach) serving telemetry on the WRAPPER's executor
+        (the streaming epoch and jit caches live there) — see
+        ``JAGIndex.attach_telemetry``. The streaming-only signals (epoch
+        rolls, compactions, delta-scan fraction) tick the same registry.
+        """
+        return JAGIndex.attach_telemetry(self, telemetry)
 
     def compaction_break_even(self, k: Optional[int] = None
                               ) -> Optional[Tuple[float, float, bool]]:
@@ -293,11 +304,15 @@ class StreamingJAGIndex:
         self._merged = None
         self.epoch += 1
         self.n_compactions += 1
+        if self.telemetry is not None and self.telemetry.enabled:
+            self.telemetry.on_compaction()
         return True
 
     # -- queries (base route + delta scan, merged exactly) -----------------
     def _with_delta(self, base_res: SearchResult, queries,
                     filt, k: int) -> SearchResult:
+        if self.telemetry is not None and self.telemetry.enabled:
+            self.telemetry.on_search(delta_scanned=self.delta.n > 0)
         if self.delta.n == 0:
             return base_res
         self._last_k = int(k)
@@ -350,6 +365,13 @@ class StreamingJAGIndex:
             planner=planner, return_plan=True, mode=mode, layout=layout,
             dtype=dtype)
         res = self._with_delta(base, queries, filt, k)
+        if self.delta.n > 0 and getattr(p, "realized", None) is not None:
+            # the realized route includes the merged delta scan
+            if isinstance(p.realized, str):
+                p = p._replace(realized=p.realized + "+delta")
+            else:
+                p = p._replace(realized=tuple(r + "+delta"
+                                              for r in p.realized))
         return (res, p) if return_plan else res
 
     # -- persistence -------------------------------------------------------

@@ -165,6 +165,73 @@ def test_jag005_host_sync_in_jit_roots():
     assert codes(ok) == []
 
 
+def test_jag006_telemetry_in_jit_roots():
+    # telemetry mutations inside an executor make() factory: the obs/
+    # contract is host-side-after-return only
+    surface = "src/repro/core/build.py"
+    factory = """
+    def make():
+        def run(x):
+            self.telemetry.traces.append(x)
+            return x
+        return run
+    """
+    assert codes(factory) == ["JAG006"]
+    metric = """
+    def make():
+        def run(x):
+            tel.metrics.counter("jag_x").inc()
+            return x
+        return run
+    """
+    assert codes(metric) == ["JAG006"]
+    # host timestamps constant-fold at trace time inside a jit root
+    timer = """
+    import jax, time
+
+    @jax.jit
+    def f(x):
+        t0 = time.perf_counter()
+        return x + t0
+    """
+    assert codes(timer, surface) == ["JAG006"]
+
+
+def test_jag006_host_side_telemetry_is_fine():
+    # the actual dispatch/search_auto wrapper shape: timing + recording
+    # around (not inside) the compiled route
+    ok = """
+    import time
+
+    def timed(route, *args):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(route(*args))
+        tel.metrics.counter("jag_route_call_total").inc()
+        tel.traces.append(out)
+        return out, time.perf_counter() - t0
+    """
+    assert codes(ok) == []
+    # a plain list append inside a make() factory is not telemetry
+    plain = """
+    def make():
+        def run(xs):
+            out = []
+            out.append(xs)
+            return out
+        return run
+    """
+    assert codes(plain) == []
+    # the executor's trace_log analysis hook is exempt by name
+    log = """
+    def make():
+        def run(x):
+            self.trace_log.append(x)
+            return x
+        return run
+    """
+    assert codes(log) == []
+
+
 def test_lint_real_executor_passes():
     with open(f"{REPO}/src/repro/serve/executor.py") as fh:
         assert codes(fh.read(), "src/repro/serve/executor.py") == []
@@ -284,6 +351,9 @@ def test_audit_covers_every_route(audit_report):
         "prefilter", "postfilter", "unfiltered", "delta", "merge",
         "graph:default:f32", "graph:default:int8",
         "graph:fused:f32", "graph:fused:int8"}
+    # PR 9: the audited programs were captured WITH telemetry attached —
+    # the zero-callback budgets below therefore prove tracing adds none
+    assert audit_report["meta"]["telemetry"] is True
 
 
 def test_audit_fused_routes_one_gather_per_expansion(audit_report):

@@ -1,0 +1,505 @@
+"""Telemetry subsystem tests: traces, metrics, hooks, drift/recal, realized
+routes, and the jagstat CLI.
+
+The index fixtures here are tiny (N=400) — telemetry is host-side
+bookkeeping, so the assertions are about record/counter correctness and
+policy (hysteresis, exactly-once miss accounting), not performance; the
+<5% overhead bar lives in ``benchmarks/obs_bench.py`` under CI.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import JAGConfig, JAGIndex, range_filters, range_table
+from repro.cost.model import BASE_ROUTES, Observation, fit
+from repro.obs import Telemetry
+from repro.obs.drift import detect_drift, relative_error
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.recal import (heldout_error, observations_from_traces,
+                             recalibrate)
+from repro.obs.trace import TraceBuffer, TraceRecord, load_jsonl
+from repro.serve.planner import PlannerConfig, explain
+from repro.stream import StreamingJAGIndex
+
+N, D, B = 400, 8, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(N, D)).astype(np.float32)
+    vals = rng.uniform(0, 1, N).astype(np.float32)
+    q = (xb[rng.integers(0, N, B)] +
+         0.05 * rng.normal(size=(B, D))).astype(np.float32)
+    cfg = JAGConfig(degree=6, ls_build=8, batch_size=128, cand_pool=16,
+                    calib_samples=16, n_seeds=2)
+    index = JAGIndex.build(xb, range_table(vals), cfg)
+    return index, q
+
+
+def mixed_filt(b=B):
+    his = np.where(np.arange(b) % 2 == 0, 0.01, 0.9).astype(np.float32)
+    return range_filters(np.zeros(b, np.float32), his)
+
+
+def uniform_filt(sel, b=B):
+    return range_filters(np.zeros(b, np.float32),
+                         np.full(b, sel, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# trace ring buffer
+# ---------------------------------------------------------------------------
+
+def _rec(qid, **kw):
+    base = dict(qid=qid, ts=0.0, epoch=0, band="graph", route="graph",
+                group=0, group_size=1, batch=1, mode="batch", sel=0.1,
+                k=10, ls=64, n=1000, d=16, n_clauses=1, delta_n=0,
+                shard=None, predicted=None, cost_metric=None,
+                observed_us=100.0, n_dist=50, n_expanded=5)
+    base.update(kw)
+    return TraceRecord(**base)
+
+
+def test_ring_buffer_bounded_ordered_dropped():
+    buf = TraceBuffer(capacity=4)
+    for i in range(10):
+        buf.append(_rec(i))
+    assert len(buf) == 4
+    assert [r.qid for r in buf] == [6, 7, 8, 9]     # oldest-first
+    assert buf.dropped == 6
+    assert [r.qid for r in buf.window(2)] == [8, 9]
+    buf.clear()
+    assert len(buf) == 0 and buf.dropped == 0
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    buf = TraceBuffer(capacity=8)
+    buf.append(_rec(0, predicted={"graph": 12.5, "prefilter": 99.0},
+                    cost_metric="us", shard=[8, 125]))
+    buf.append(_rec(1, route="graph[fused,int8]+delta", delta_n=64))
+    path = str(tmp_path / "traces.jsonl")
+    assert buf.dump_jsonl(path) == 2
+    back = load_jsonl(path)
+    assert back == list(buf)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counters_and_labels():
+    reg = MetricsRegistry()
+    reg.counter("jag_x_total", route="graph").inc()
+    reg.counter("jag_x_total", route="graph").inc(2)
+    reg.counter("jag_x_total", route="prefilter").inc()
+    assert reg.value("jag_x_total", route="graph") == 3
+    assert reg.value("jag_x_total", route="none") == 0
+    assert reg.counter_total("jag_x_total") == 4
+
+
+def test_histogram_quantiles_log_buckets():
+    h = Histogram(lo=1.0, factor=2.0, n_buckets=16)
+    for v in range(1, 1001):
+        h.observe(float(v))
+    # p50 rank is 500 -> bucket upper bound 512; p99 -> 1024
+    assert h.quantile(0.5) == 512.0
+    assert h.quantile(0.99) == 1024.0
+    assert h.count == 1000
+    p = h.percentiles()
+    assert p["p50"] <= p["p95"] <= p["p99"]
+    assert h.quantile(0.0) <= h.quantile(1.0)
+
+
+def test_histogram_overflow_bucket():
+    h = Histogram(lo=1.0, factor=2.0, n_buckets=3)   # bounds 1, 2, 4
+    h.observe(1e9)
+    assert h.quantile(1.0) == float("inf")
+
+
+def test_prometheus_render():
+    reg = MetricsRegistry()
+    reg.counter("jag_call_total", route="graph").inc(5)
+    reg.histogram("jag_lat_us", lo=1.0, factor=2.0, n_buckets=4,
+                  route="graph").observe(3.0)
+    text = reg.render()
+    assert 'jag_call_total{route="graph"} 5' in text
+    assert 'jag_lat_us_bucket{route="graph",le="4"} 1' in text
+    assert 'jag_lat_us_bucket{route="graph",le="+Inf"} 1' in text
+    assert 'jag_lat_us_count{route="graph"} 1' in text
+    snap = reg.snapshot()
+    assert snap["counters"]['jag_call_total{route="graph"}'] == 5
+
+
+# ---------------------------------------------------------------------------
+# attach / trace recording through search_auto
+# ---------------------------------------------------------------------------
+
+def test_attach_records_per_query_traces(setup):
+    index, q = setup
+    tel = index.attach_telemetry()
+    try:
+        tel.traces.clear()
+        index.search_auto(q, mixed_filt(), k=3, ls=8)
+        index.search_auto(q, mixed_filt(), k=3, ls=8)
+        recs = list(tel.traces)
+        assert len(recs) == 2 * B
+        assert len({r.qid for r in recs}) == 2 * B
+        assert all(r.band in ("prefilter", "graph", "postfilter")
+                   for r in recs)
+        assert all(r.observed_us > 0 for r in recs)
+        assert all(r.n == N and r.d == D and r.batch == B for r in recs)
+        assert all(r.shard is None and r.epoch == 0 for r in recs)
+        assert all(0.0 <= r.sel <= 1.0 for r in recs)
+        # per-query traces cover both bands of the mixed batch
+        assert len({r.band for r in recs}) >= 2
+        # route counters tick per group, query counters per query
+        assert tel.metrics.counter_total("jag_route_query_total") == 2 * B
+        assert tel.metrics.value("jag_search_total") == 2
+    finally:
+        index.attach_telemetry(None)
+
+
+def test_detach_stops_tracing(setup):
+    index, q = setup
+    tel = index.attach_telemetry()
+    index.search_auto(q, mixed_filt(), k=3, ls=8)
+    n0 = len(tel.traces)
+    assert n0 > 0
+    assert index.attach_telemetry(None) is None
+    index.search_auto(q, mixed_filt(), k=3, ls=8)
+    assert len(tel.traces) == n0
+    assert index.executor.miss_hook is None
+    # disabled-but-attached is also off
+    tel2 = index.attach_telemetry(Telemetry(enabled=False))
+    index.search_auto(q, mixed_filt(), k=3, ls=8)
+    assert len(tel2.traces) == 0
+    index.attach_telemetry(None)
+
+
+def _toy_cost(route, f):
+    if route == "prefilter":
+        return 0.002 * (f["n"] * f["d"]) * f["sel"] ** 0.5
+    if route == "graph":
+        return 0.3 * (f["ls"] * f["d"]) ** 0.8 * f["sel"] ** -0.2 \
+            * f["n"] ** 0.1
+    assert route == "postfilter"
+    return 0.1 * (f["ls"] * f["d"]) ** 0.9 * f["n"] ** 0.05 \
+        * f["sel"] ** 0.3
+
+
+def _toy_model(scale=1.0):
+    """A model whose true costs are exactly in phi's span (exact fit)."""
+    obs = []
+    for n in (300.0, 600.0, 1200.0):
+        for sel in (0.001, 0.01, 0.1, 0.5, 0.9):
+            f = dict(sel=sel, n=n, d=8.0, k=5.0, ls=16.0, n_clauses=1.0)
+            for route in BASE_ROUTES:
+                us = _toy_cost(route, f) * scale
+                obs.append(Observation(route, f, us=us, n_dist=us))
+    return fit(obs, {"source": "toy"})
+
+
+def test_traces_carry_predictions_with_cost_model(setup):
+    index, q = setup
+    index.attach_cost_model(_toy_model(), metric="us")
+    tel = index.attach_telemetry()
+    try:
+        index.search_auto(q, mixed_filt(), k=3, ls=8)
+        recs = list(tel.traces)
+        assert len(recs) == B
+        for r in recs:
+            assert r.cost_metric == "us"
+            assert set(r.predicted) == set(BASE_ROUTES)
+            assert all(c > 0 for c in r.predicted.values())
+            assert relative_error(r) is not None
+    finally:
+        index.attach_telemetry(None)
+        index.attach_cost_model(None)
+
+
+# ---------------------------------------------------------------------------
+# executor miss hook + trace_log composition (satellite)
+# ---------------------------------------------------------------------------
+
+def test_miss_hook_exactly_once_per_key(setup):
+    index, q = setup
+    ex = index.executor
+    misses = []
+    ex.miss_hook = misses.append
+    try:
+        filt = uniform_filt(0.4)
+        index.search(q, filt, k=3, ls=9)      # odd ls -> fresh cache key
+        n1 = len(misses)
+        assert n1 >= 1
+        index.search(q, filt, k=3, ls=9)      # warm: same key, no new miss
+        assert len(misses) == n1
+        index.search(q, filt, k=4, ls=9)      # distinct key -> one more
+        assert len(misses) == n1 + 1
+        # exactly once per distinct (epoch,)+key
+        assert len(set(misses)) == len(misses)
+        assert all(key[0] == ex._cache_epoch for key in misses)
+        assert all((key in ex._cache) for key in misses)
+    finally:
+        ex.miss_hook = None
+
+
+def test_epoch_roll_hook_and_trace_log_compose(setup):
+    index, q = setup
+    stream = StreamingJAGIndex(index, compact_frac=10.0)
+    tel = stream.attach_telemetry()
+    filt = uniform_filt(0.4)
+    stream.search_auto(q, filt, k=3, ls=8)
+    assert tel.metrics.value("jag_epoch_roll_total") == 0
+    m0 = tel.jit_misses()
+    assert m0 > 0
+
+    rng = np.random.default_rng(7)
+    stream.insert(rng.normal(size=(16, D)).astype(np.float32),
+                  range_table(rng.uniform(0, 1, 16).astype(np.float32)))
+    # PR 8 analysis capture must compose with telemetry enabled
+    stream.executor.trace_log = captured = []
+    stream.search_auto(q, filt, k=3, ls=8)
+    stream.executor.trace_log = None
+    assert captured, "trace_log capture dead with telemetry attached"
+    assert tel.metrics.value("jag_epoch_roll_total") == 1
+    assert tel.jit_misses() > m0          # rolled caches re-compile
+    assert tel.delta_scan_fraction() > 0
+    # streaming search traces got the +delta realized suffix
+    assert any(t.route.endswith("+delta") for t in tel.traces)
+    assert all(t.delta_n == 16 for t in list(tel.traces)[-B:])
+
+
+def test_compaction_counter(setup):
+    index, q = setup
+    stream = StreamingJAGIndex(index, compact_frac=10.0)
+    tel = stream.attach_telemetry()
+    rng = np.random.default_rng(8)
+    stream.insert(rng.normal(size=(8, D)).astype(np.float32),
+                  range_table(rng.uniform(0, 1, 8).astype(np.float32)))
+    assert stream.compact()
+    assert tel.metrics.value("jag_compaction_total") == 1
+    res, p = stream.search_auto(q, uniform_filt(0.4), k=3, ls=8,
+                                return_plan=True)
+    # compacted: no delta -> no +delta suffix on realized routes
+    assert all(not r.endswith("+delta") for r in p.realized)
+
+
+# ---------------------------------------------------------------------------
+# drift + recalibration (satellite)
+# ---------------------------------------------------------------------------
+
+def _trace_window(model, scale, n_traces=240, n=2000.0, noise=0.02, seed=0,
+                  bands=None):
+    """Traces whose observed cost is ``scale`` x the model's prediction."""
+    rng = np.random.default_rng(seed)
+    sweep = (0.001, 0.003, 0.01, 0.05, 0.1, 0.3, 0.5, 0.7, 0.9)
+    out = []
+    for i in range(n_traces):
+        sel = sweep[i % len(sweep)]
+        f = dict(sel=sel, n=n, d=8.0, k=5.0, ls=16.0, n_clauses=1.0)
+        pred = {r: model.predict(r, f) for r in BASE_ROUTES}
+        band = (bands[i % len(bands)] if bands
+                else min(pred, key=pred.get))
+        obs = pred[band] * scale * (1.0 + noise * rng.standard_normal())
+        out.append(_rec(i, band=band, route=band, sel=sel, k=5, ls=16,
+                        n=int(n), d=8, predicted=pred, cost_metric="us",
+                        observed_us=float(obs), n_dist=int(obs) + 1))
+    return out
+
+
+def test_drift_flagged_on_mis_scaled_model():
+    model = _toy_model()
+    window = _trace_window(model, scale=3.0)
+    report = detect_drift(window, threshold=0.5)
+    assert report.any_drifted
+    # |p - 3p| / 3p = 2/3 for every trace
+    for band, med in report.median_rel_err.items():
+        assert 0.55 < med < 0.8, (band, med)
+        assert report.drifted[band]
+    assert "DRIFT" in report.summary()
+
+
+def test_no_drift_on_unbiased_window():
+    model = _toy_model()
+    report = detect_drift(_trace_window(model, scale=1.0), threshold=0.5)
+    assert not report.any_drifted
+    assert report.median_rel_err            # measured, just small
+    assert all(m < 0.1 for m in report.median_rel_err.values())
+
+
+def test_observations_from_traces_roundtrip():
+    model = _toy_model()
+    window = _trace_window(model, scale=3.0, n_traces=30)
+    obs = observations_from_traces(window)
+    assert len(obs) == 30
+    assert all(o.us > 0 and o.route in BASE_ROUTES for o in obs)
+    assert obs[0].features["n"] == 2000.0
+    err = heldout_error(model, window)
+    assert 0.6 < err < 0.75                 # ~2/3 by construction
+
+
+def test_recalibrate_swaps_on_drifted_window():
+    model = _toy_model()
+    # force band coverage so the refit re-learns every route's scale
+    window = _trace_window(model, scale=3.0, bands=BASE_ROUTES)
+    rep = recalibrate(model, window, metric="us", min_traces=32)
+    assert rep.swapped, rep.reason
+    assert rep.refit_err < rep.stale_err
+    assert rep.model is not model
+    assert rep.model.covers(BASE_ROUTES, "us")
+    # the refit learned the x3: its predictions track observed costs
+    f = dict(sel=0.1, n=2000.0, d=8.0, k=5.0, ls=16.0, n_clauses=1.0)
+    for r in BASE_ROUTES:
+        ratio = rep.model.predict(r, f) / model.predict(r, f)
+        assert 2.5 < ratio < 3.5, (r, ratio)
+
+
+def test_hysteresis_rejects_unbiased_window_no_oscillation():
+    model = _toy_model()
+    window = _trace_window(model, scale=1.0)
+    for _ in range(3):                      # repeated calls stay rejected
+        rep = recalibrate(model, window, metric="us", min_traces=32)
+        assert not rep.swapped
+        assert rep.reason.startswith("no drift")
+        assert rep.model is model
+
+
+def test_recalibrate_merges_unserved_routes():
+    # window only ever served the graph band: the candidate must keep the
+    # stale prefilter/postfilter coefficients (coverage never shrinks)
+    model = _toy_model()
+    window = _trace_window(model, scale=3.0, bands=("graph",))
+    rep = recalibrate(model, window, metric="us", min_traces=32)
+    assert rep.swapped, rep.reason
+    assert rep.model.covers(BASE_ROUTES, "us")
+    f = dict(sel=0.1, n=2000.0, d=8.0, k=5.0, ls=16.0, n_clauses=1.0)
+    # unserved routes keep stale predictions bit-identically
+    for r in ("prefilter", "postfilter"):
+        assert rep.model.predict(r, f) == pytest.approx(model.predict(r, f))
+
+
+def test_recalibrate_window_too_small():
+    model = _toy_model()
+    rep = recalibrate(model, _trace_window(model, 3.0, n_traces=8),
+                      metric="us", min_traces=64)
+    assert not rep.swapped and "window too small" in rep.reason
+
+
+def test_maybe_recalibrate_attaches_on_swap(setup):
+    index, q = setup
+    stale = _toy_model()
+    index.attach_cost_model(stale, metric="us")
+    tel = index.attach_telemetry(Telemetry(drift_threshold=0.5))
+    try:
+        for t in _trace_window(stale, scale=3.0, n_traces=128):
+            tel.traces.append(t)
+        rep = tel.maybe_recalibrate(index)
+        assert rep.swapped
+        assert index.cost_model is rep.model
+        assert tel.metrics.value("jag_recal_swap_total") == 1
+        assert tel.last_recal is rep
+    finally:
+        index.attach_telemetry(None)
+        index.attach_cost_model(None)
+
+
+# ---------------------------------------------------------------------------
+# realized-route satellite (bugfix): plans report what actually executed
+# ---------------------------------------------------------------------------
+
+def test_realized_routes_default_variant(setup):
+    index, q = setup
+    res, p = index.search_auto(q, mixed_filt(), k=3, ls=8, return_plan=True)
+    assert p.realized == p.routes           # default layout == band names
+    assert "executed[" not in explain(p)    # byte-stable when identical
+
+
+def test_realized_routes_serving_variant(setup):
+    index, q = setup
+    res, p = index.search_auto(q, uniform_filt(0.4), k=3, ls=8,
+                               return_plan=True, layout="fused",
+                               dtype="int8")
+    assert p.routes == ("graph",) * B
+    assert p.realized == ("graph[fused,int8]",) * B
+    note = explain(p)
+    assert "executed[graph[fused,int8]:8]" in note
+
+
+def test_realized_route_batch_mode(setup):
+    index, q = setup
+    res, p = index.search_auto(q, uniform_filt(0.4), k=3, ls=8,
+                               return_plan=True, mode="batch",
+                               layout="fused")
+    assert p.route == "graph"
+    assert p.realized == "graph[fused,f32]"
+    assert "executed[graph[fused,f32]]" in explain(p)
+
+
+def test_realized_streaming_delta_suffix(setup):
+    index, q = setup
+    stream = StreamingJAGIndex(index, compact_frac=10.0)
+    rng = np.random.default_rng(9)
+    stream.insert(rng.normal(size=(8, D)).astype(np.float32),
+                  range_table(rng.uniform(0, 1, 8).astype(np.float32)))
+    res, p = stream.search_auto(q, mixed_filt(), k=3, ls=8,
+                                return_plan=True)
+    assert all(r.endswith("+delta") for r in p.realized)
+    assert "executed[" in explain(p)
+
+
+def test_plan_without_execution_has_no_realized(setup):
+    from repro.serve.planner import plan_per_query
+    index, q = setup
+    p = plan_per_query(mixed_filt(), index.attr, PlannerConfig(),
+                       executor=index.executor)
+    assert p.realized is None
+    assert "executed[" not in explain(p)
+
+
+# ---------------------------------------------------------------------------
+# jagstat CLI (exporter satellite)
+# ---------------------------------------------------------------------------
+
+def _load_jagstat():
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                        "jagstat.py")
+    spec = importlib.util.spec_from_file_location("jagstat", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_jagstat_renders_summary(tmp_path, capsys, setup):
+    index, q = setup
+    index.attach_cost_model(_toy_model(), metric="us")
+    tel = index.attach_telemetry()
+    try:
+        index.search_auto(q, mixed_filt(), k=3, ls=8)
+        index.search_auto(q, uniform_filt(0.4), k=3, ls=8)
+        path = str(tmp_path / "traces.jsonl")
+        assert tel.traces.dump_jsonl(path) == 2 * B
+    finally:
+        index.attach_telemetry(None)
+        index.attach_cost_model(None)
+
+    jagstat = _load_jagstat()
+    assert jagstat.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "route" in out and "p50us" in out
+    rows = jagstat.summarize(load_jsonl(path))
+    assert sum(r["queries"] for r in rows) == 2 * B
+    assert abs(sum(r["share_pct"] for r in rows) - 100.0) < 0.5
+    assert all(r["p50_us"] > 0 for r in rows)
+    # --json mode emits machine-readable rows
+    assert jagstat.main([path, "--json"]) == 0
+    import json as _json
+    assert _json.loads(capsys.readouterr().out)
+
+
+def test_jagstat_empty_file(tmp_path, capsys):
+    path = str(tmp_path / "empty.jsonl")
+    open(path, "w").close()
+    assert _load_jagstat().main([path]) == 1

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""jagstat: per-route serving summary from a telemetry trace dump.
+
+Usage:
+    python tools/jagstat.py TRACES.jsonl [--drift-threshold X] [--json]
+
+One row per realized route: traffic share, latency percentiles
+(p50/p95/p99 us over per-query wall time), mean n_dist (the work/recall
+proxy), median predicted-vs-observed relative cost error, and drift
+status. The input is a ``TraceBuffer.dump_jsonl`` file (see
+``repro.obs``; produce one with ``Telemetry().traces.dump_jsonl(path)``
+or ``benchmarks/obs_bench.py --traces PATH``).
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.obs.drift import relative_error  # noqa: E402
+from repro.obs.trace import load_jsonl  # noqa: E402
+
+
+def summarize(records, threshold=0.5):
+    """Per-realized-route summary rows, route-name sorted."""
+    groups = {}
+    for t in records:
+        groups.setdefault(t.route, []).append(t)
+    total = sum(len(v) for v in groups.values()) or 1
+    rows = []
+    for route in sorted(groups):
+        rs = groups[route]
+        lat = np.asarray([t.observed_us for t in rs], np.float64)
+        errs = [e for e in (relative_error(t) for t in rs) if e is not None]
+        med = float(np.median(errs)) if errs else None
+        rows.append({
+            "route": route,
+            "queries": len(rs),
+            "share_pct": round(100.0 * len(rs) / total, 1),
+            "p50_us": round(float(np.percentile(lat, 50)), 1),
+            "p95_us": round(float(np.percentile(lat, 95)), 1),
+            "p99_us": round(float(np.percentile(lat, 99)), 1),
+            "mean_n_dist": round(float(np.mean([t.n_dist for t in rs])), 1),
+            "rel_err": None if med is None else round(med, 3),
+            "drift": None if med is None else bool(med > threshold),
+        })
+    return rows
+
+
+def render(rows):
+    cols = ("route", "queries", "share%", "p50us", "p95us", "p99us",
+            "n_dist~", "relerr~", "drift")
+    table = [cols]
+    for r in rows:
+        table.append((
+            r["route"], str(r["queries"]), str(r["share_pct"]),
+            str(r["p50_us"]), str(r["p95_us"]), str(r["p99_us"]),
+            str(r["mean_n_dist"]),
+            "-" if r["rel_err"] is None else str(r["rel_err"]),
+            "-" if r["drift"] is None else ("DRIFT" if r["drift"] else "ok")))
+    widths = [max(len(row[i]) for row in table) for i in range(len(cols))]
+    return "\n".join("  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+                     for row in table)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="per-route serving summary from a telemetry trace dump")
+    ap.add_argument("traces", help="JSONL file from TraceBuffer.dump_jsonl")
+    ap.add_argument("--drift-threshold", type=float, default=0.5,
+                    help="median rel-err above this flags DRIFT (default .5)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit summary rows as JSON instead of a table")
+    args = ap.parse_args(argv)
+
+    records = load_jsonl(args.traces)
+    if not records:
+        print(f"no trace records in {args.traces}", file=sys.stderr)
+        return 1
+    rows = summarize(records, args.drift_threshold)
+    if args.json:
+        json.dump(rows, sys.stdout, indent=1)
+        print()
+    else:
+        print(f"# {len(records)} traces, {len(rows)} routes "
+              f"(drift threshold {args.drift_threshold})")
+        print(render(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
