@@ -290,6 +290,15 @@ def audit_single_device() -> Dict:
               lambda layout=layout, dtype=dtype: ex.graph(
                   q, filt, k=k, ls=ls, max_iters=mi,
                   layout=layout, dtype=dtype))
+    # the introspective traversal (its own cache-key component) must meet
+    # the exact same budgets — its extra outputs are pure device counters,
+    # so zero callbacks/collectives and identical gather-per-expansion
+    # counts certify that turning introspection on cannot change serving
+    for layout, dtype in GRAPH_VARIANTS:
+        audit(f"graph:{layout}:{dtype}:introspect", "graph",
+              lambda layout=layout, dtype=dtype: ex.graph(
+                  q, filt, k=k, ls=ls, max_iters=mi,
+                  layout=layout, dtype=dtype, introspect=True))
     audit("postfilter", "postfilter",
           lambda: ex.postfilter(q, filt, k=k, ls=ls, max_iters=mi))
     audit("unfiltered", "unfiltered",

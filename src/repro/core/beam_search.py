@@ -33,6 +33,27 @@ class SearchResult(NamedTuple):
     n_dist: jnp.ndarray     # int32 [B]
 
 
+class TraversalStats(NamedTuple):
+    """Per-query device-side traversal counters (``introspect=True``).
+
+    Pure jit outputs — computed from arrays the loop already materializes,
+    no host callbacks, no collectives (the auditor certifies this on the
+    introspective executor route).
+
+      hops      : beam expansions performed (== SearchResult.n_expanded)
+      sat_step  : 1-based iteration at which the beam last improved (a new
+                  candidate entered the kept ls slots); 0 = seeds only.
+                  The frontier is saturated from this step on.
+      dead_ends : iterations where the lane was active but NO filter-valid
+                  candidate (primary == 0) entered the beam — the paper's
+                  "navigational dead-end" events, made measurable.
+    """
+
+    hops: jnp.ndarray       # int32 [B]
+    sat_step: jnp.ndarray   # int32 [B]
+    dead_ends: jnp.ndarray  # int32 [B]
+
+
 class _State(NamedTuple):
     it: jnp.ndarray
     beam_ids: jnp.ndarray
@@ -43,6 +64,9 @@ class _State(NamedTuple):
     vlog: jnp.ndarray
     n_expanded: jnp.ndarray
     n_dist: jnp.ndarray
+    # () in the standard traversal; (sat_step, dead_ends) int32 [B] pairs
+    # when introspecting — keeping the standard pytree byte-identical.
+    extra: tuple = ()
 
 
 def _mask_dup_within_row(ids: jnp.ndarray) -> jnp.ndarray:
@@ -68,7 +92,8 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
                   key_fn: KeyFn,
                   *, ls: int, k: int, max_iters: int,
                   dist_fn=gathered_d2, expand_fn=None,
-                  fetch_fn=None, dedup: str = "bitmap") -> SearchResult:
+                  fetch_fn=None, dedup: str = "bitmap",
+                  introspect: bool = False):
     """GreedySearch under a lexicographic comparator. See module docstring.
 
     ``expand_fn(p int32[B]) -> int32[B, C]`` overrides the 1-hop neighbor
@@ -91,6 +116,14 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
     "scan" = compare against beam ∪ expansion log only (no N-sized state —
     removes the bitmap's HBM traffic; an evicted-unexpanded candidate may be
     revisited, which only costs work, never correctness).
+
+    ``introspect=True`` returns ``(SearchResult, TraversalStats)`` instead
+    of a bare SearchResult: hops / frontier-saturation step / dead-end
+    events per query, as extra jit outputs. The (ids, primary, secondary)
+    results are bit-identical to the standard traversal: the merge sort
+    carries one extra int32 operand (a beam-vs-candidate tag) through the
+    SAME stable two-key ``jax.lax.sort``, which cannot change the
+    permutation the keys dictate.
     """
     N = xb.shape[0]
     B = queries.shape[0]
@@ -130,9 +163,12 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
             jnp.uint32(1) << (entry % 32).astype(jnp.uint32))
         seen = seen.at[:, entry // 32].add(bitvals[None, :])
 
+    extra0 = ((jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32))
+              if introspect else ())
     st = _State(jnp.int32(0), beam_ids, beam_p, beam_s, beam_vis, seen,
                 jnp.full((B, max_iters), -1, jnp.int32),
-                jnp.zeros((B,), jnp.int32), jnp.ones((B,), jnp.int32))
+                jnp.zeros((B,), jnp.int32), jnp.ones((B,), jnp.int32),
+                extra0)
 
     def cond(st: _State):
         return (st.it < max_iters) & jnp.any(~jnp.all(st.beam_vis, axis=1))
@@ -182,11 +218,31 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
         m_s = jnp.concatenate([st.beam_s, cs], axis=1)
         m_ids = jnp.concatenate([st.beam_ids, c_ids], axis=1)
         m_vis = jnp.concatenate([beam_vis, c_vis], axis=1)
-        m_p, m_s, m_ids, m_vis = _sort_beam(m_p, m_s, m_ids, m_vis)
+        if introspect:
+            # tag beam slots 0 / candidates 1 through the SAME stable
+            # two-key sort: equal keys keep their order, so the kept
+            # (ids, p, s) are bit-identical to the untagged sort — the
+            # tag only reveals which kept slots a candidate entered.
+            tag = jnp.concatenate(
+                [jnp.zeros_like(st.beam_ids), jnp.ones_like(c_ids)], axis=1)
+            m_p, m_s, m_ids, m_vis8, m_tag = jax.lax.sort(
+                (m_p, m_s, m_ids, m_vis.astype(jnp.int8), tag), num_keys=2)
+            m_vis = m_vis8.astype(jnp.bool_)
+            entered = (m_tag[:, :ls] == 1) & (m_ids[:, :ls] >= 0)
+            improved = active & jnp.any(entered, axis=1)
+            valid_in = active & jnp.any(
+                entered & (m_p[:, :ls] == 0.0), axis=1)
+            sat_step, dead_ends = st.extra
+            extra = (jnp.where(improved, st.it + 1, sat_step),
+                     dead_ends + (active & ~valid_in).astype(jnp.int32))
+        else:
+            m_p, m_s, m_ids, m_vis = _sort_beam(m_p, m_s, m_ids, m_vis)
+            extra = st.extra
 
         return _State(st.it + 1, m_ids[:, :ls], m_p[:, :ls], m_s[:, :ls],
                       m_vis[:, :ls], seen, vlog,
-                      st.n_expanded + active.astype(jnp.int32), n_dist)
+                      st.n_expanded + active.astype(jnp.int32), n_dist,
+                      extra)
 
     st = jax.lax.while_loop(cond, body, st)
 
@@ -196,5 +252,9 @@ def greedy_search(graph: jnp.ndarray,      # int32 [N, R] (-1 sentinel)
     fids = jnp.where(st.beam_vis & (st.beam_ids >= 0), st.beam_ids, -1)
     fp, fs, fids, _ = _sort_beam(fp, fs, fids,
                                  jnp.zeros_like(fids, jnp.bool_))
-    return SearchResult(fids[:, :k], fp[:, :k], fs[:, :k], st.vlog,
-                        st.n_expanded, st.n_dist)
+    result = SearchResult(fids[:, :k], fp[:, :k], fs[:, :k], st.vlog,
+                          st.n_expanded, st.n_dist)
+    if introspect:
+        sat_step, dead_ends = st.extra
+        return result, TraversalStats(st.n_expanded, sat_step, dead_ends)
+    return result

@@ -321,44 +321,72 @@ class JAGIndex:
         if tel is not None and not tel.enabled:
             tel = None
         # telemetry tap: dispatch blocks on each group and hands back
-        # (group, result, wall seconds) — all host-side, post-execution
+        # (group, result, traversal stats, wall seconds) — all host-side,
+        # post-execution. introspect serves graph groups through the
+        # executor's introspective compilation (bit-identical results,
+        # extra device-side counters); spans time the host pipeline.
         timed = [] if tel is not None else None
         on_group = (None if timed is None
-                    else lambda g, r, s: timed.append((g, r, s)))
-        if mode == "per_query":
-            p = plan_per_query(filt, self.attr, cfg, executor=self.executor,
-                               router=router)
-            res = dispatch_per_query(self.executor, queries, filt, p, k=k,
-                                     ls=ls, max_iters=mi, layout=layout,
-                                     dtype=dtype, on_group=on_group)
-            p = p._replace(realized=tuple(
-                route_descriptor(r, layout, dtype) for r in p.routes))
-        elif mode == "batch":
-            p = _plan(filt, self.attr, cfg, executor=self.executor,
-                      router=router)
-            if timed is None:
-                res = run_route(self.executor, p.route, queries, filt, k=k,
-                                ls=ls, max_iters=mi, layout=layout,
-                                dtype=dtype)
+                    else lambda g, r, st, s: timed.append((g, r, st, s)))
+        introspect = bool(getattr(tel, "introspect", False))
+        spans = getattr(tel, "spans", None)
+
+        def _span(name, **kw):
+            from contextlib import nullcontext
+            return nullcontext() if spans is None else spans.span(name, **kw)
+
+        with _span("search_auto", mode=mode,
+                   batch=int(np.shape(queries)[0])):
+            if mode == "per_query":
+                with _span("plan"):
+                    p = plan_per_query(filt, self.attr, cfg,
+                                       executor=self.executor, router=router)
+                res = dispatch_per_query(self.executor, queries, filt, p,
+                                         k=k, ls=ls, max_iters=mi,
+                                         layout=layout, dtype=dtype,
+                                         on_group=on_group,
+                                         introspect=introspect, spans=spans)
+                p = p._replace(realized=tuple(
+                    route_descriptor(r, layout, dtype) for r in p.routes))
+            elif mode == "batch":
+                with _span("plan"):
+                    p = _plan(filt, self.attr, cfg, executor=self.executor,
+                              router=router)
+                with _span(f"execute:{p.route}",
+                           queries=int(np.shape(queries)[0])):
+                    if timed is None:
+                        res = run_route(self.executor, p.route, queries,
+                                        filt, k=k, ls=ls, max_iters=mi,
+                                        layout=layout, dtype=dtype)
+                    else:
+                        t0 = time.perf_counter()
+                        out = run_route(self.executor, p.route, queries,
+                                        filt, k=k, ls=ls, max_iters=mi,
+                                        layout=layout, dtype=dtype,
+                                        introspect=introspect)
+                        res, stats = out if introspect else (out, None)
+                        res = jax.block_until_ready(res)
+                        ids = np.arange(np.asarray(p.selectivity).size,
+                                        dtype=np.int32)
+                        timed.append(
+                            (GroupPlan(p.route, ids, p.batch_selectivity),
+                             res, stats, time.perf_counter() - t0))
+                p = p._replace(
+                    realized=route_descriptor(p.route, layout, dtype))
             else:
-                t0 = time.perf_counter()
-                res = jax.block_until_ready(
-                    run_route(self.executor, p.route, queries, filt, k=k,
-                              ls=ls, max_iters=mi, layout=layout,
-                              dtype=dtype))
-                ids = np.arange(np.asarray(p.selectivity).size, dtype=np.int32)
-                timed.append((GroupPlan(p.route, ids, p.batch_selectivity),
-                              res, time.perf_counter() - t0))
-            p = p._replace(realized=route_descriptor(p.route, layout, dtype))
-        else:
-            raise ValueError(f"mode must be 'per_query' or 'batch', "
-                             f"got {mode!r}")
+                raise ValueError(f"mode must be 'per_query' or 'batch', "
+                                 f"got {mode!r}")
         if timed:
             tel.record_call(
                 self, p,
                 [(g.route, route_descriptor(g.route, layout, dtype),
-                  g.ids, r, s) for (g, r, s) in timed],
+                  g.ids, r, st, s) for (g, r, st, s) in timed],
                 k=k, ls=ls, router=router, filt=filt, mode=mode)
+            # shadow-oracle audit of the sampled fraction — for a frozen
+            # index the served result is final here; a streaming index
+            # audits after its delta merge (stream.index.search_auto)
+            if tel.shadow is not None and not hasattr(self, "delta_arrays"):
+                tel.shadow_audit(self, queries, filt, res, p, k=k)
         return (res, p) if return_plan else res
 
     # -- multi-device serving (serve/sharded.py) ----------------------------

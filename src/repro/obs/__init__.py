@@ -1,29 +1,54 @@
-"""Serving telemetry: per-query traces, route metrics, drift-driven recal.
+"""Serving telemetry: per-query traces, route metrics, drift-driven recal,
+and quality observability (shadow-oracle recall, traversal introspection,
+pipeline spans, the serving health report).
 
 Attach to any index with ``index.attach_telemetry()`` (off by default,
 detach with ``attach_telemetry(None)``).  Everything is host-side and
 post-execution — compiled routes are bit-identical with telemetry on,
 which rule JAG006 and the compiled-route auditor enforce statically.
+The introspective graph route (``Telemetry(introspect=True)``) is the
+one deliberate exception: it compiles a *separate* cache entry whose
+extra outputs are pure device counters — still zero callbacks, zero
+collectives, and bit-identical (ids, keys).
 """
 from .drift import DriftReport, detect_drift, relative_error
+from .health import HealthSLO, health_report, render_health
+from .introspect import introspection_summary, stats_to_host
 from .metrics import Counter, Histogram, MetricsRegistry
 from .recal import RecalReport, heldout_error, observations_from_traces, recalibrate
+from .shadow import (ShadowAuditor, ShadowRecord, cells_from_records,
+                     load_shadow_jsonl, sel_band, wilson_interval)
+from .spans import Span, SpanRecorder
 from .telemetry import Telemetry
-from .trace import TraceBuffer, TraceRecord, load_jsonl
+from .trace import TraceBuffer, TraceRecord, load_buffer, load_jsonl
 
 __all__ = [
     "Counter",
     "DriftReport",
+    "HealthSLO",
     "Histogram",
     "MetricsRegistry",
     "RecalReport",
+    "ShadowAuditor",
+    "ShadowRecord",
+    "Span",
+    "SpanRecorder",
     "Telemetry",
     "TraceBuffer",
     "TraceRecord",
+    "cells_from_records",
     "detect_drift",
+    "health_report",
     "heldout_error",
+    "introspection_summary",
+    "load_buffer",
     "load_jsonl",
+    "load_shadow_jsonl",
     "observations_from_traces",
     "recalibrate",
     "relative_error",
+    "render_health",
+    "sel_band",
+    "stats_to_host",
+    "wilson_interval",
 ]

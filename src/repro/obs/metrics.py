@@ -17,6 +17,14 @@ def _label_key(labels: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label(v: str) -> str:
+    """Escape a label value per the Prometheus text exposition format:
+    backslash, double quote, and line feed must be backslash-escaped."""
+    return (str(v).replace("\\", "\\\\")
+                  .replace('"', '\\"')
+                  .replace("\n", "\\n"))
+
+
 class Counter:
     __slots__ = ("value",)
 
@@ -121,7 +129,8 @@ class MetricsRegistry:
         pairs = list(labels) + ([extra] if extra else [])
         if not pairs:
             return ""
-        return "{" + ",".join(f'{k}="{v}"' for k, v in pairs) + "}"
+        return ("{" + ",".join(f'{k}="{_escape_label(v)}"'
+                               for k, v in pairs) + "}")
 
     def render(self) -> str:
         """Prometheus-style text exposition of every metric."""

@@ -25,6 +25,8 @@ import numpy as np
 from .drift import DEFAULT_THRESHOLD, DriftReport, detect_drift
 from .metrics import MetricsRegistry
 from .recal import RecalReport, recalibrate
+from .shadow import ShadowAuditor
+from .spans import SpanRecorder
 from .trace import TraceBuffer, TraceRecord
 
 
@@ -34,13 +36,32 @@ class Telemetry:
     ``recal_every > 0`` turns on auto-recalibration: every that-many
     traced ``search_auto`` calls, ``maybe_recalibrate`` runs against the
     index the traces came from (drift-gated, hysteresis-gated).
+
+    Quality observability (all off by default):
+
+    * ``shadow`` — a sampling fraction in (0, 1] (or a pre-built
+      :class:`~repro.obs.shadow.ShadowAuditor`): that fraction of served
+      queries is deterministically sampled for exact-oracle replay.
+      Serve time only pays a cheap host-side enqueue; the oracle runs at
+      flush/report time, maintaining rolling recall estimators per
+      realized route × selectivity band × epoch.
+    * ``introspect`` — serve graph queries through the executor's
+      introspective compilation (own cache-key component, bit-identical
+      results) and stamp per-query hops / saturation step / dead-end
+      counters into the trace records.
+    * ``spans`` — record hierarchical pipeline spans
+      (plan → gather → execute → scatter → merge) into a
+      :class:`~repro.obs.spans.SpanRecorder` with Chrome-trace export.
     """
 
     def __init__(self, *, capacity: int = 4096,
                  drift_threshold: float = DEFAULT_THRESHOLD,
                  recal_every: int = 0,
                  recal_min_traces: int = 64,
-                 enabled: bool = True):
+                 enabled: bool = True,
+                 shadow=0.0,
+                 introspect: bool = False,
+                 spans=False):
         self.traces = TraceBuffer(capacity)
         self.metrics = MetricsRegistry()
         self.drift_threshold = float(drift_threshold)
@@ -48,6 +69,16 @@ class Telemetry:
         self.recal_min_traces = int(recal_min_traces)
         self.enabled = bool(enabled)
         self.last_recal: Optional[RecalReport] = None
+        if isinstance(shadow, ShadowAuditor):
+            self.shadow: Optional[ShadowAuditor] = shadow
+        else:
+            self.shadow = (ShadowAuditor(float(shadow), capacity=capacity)
+                           if shadow else None)
+        self.introspect = bool(introspect)
+        if isinstance(spans, SpanRecorder):
+            self.spans: Optional[SpanRecorder] = spans
+        else:
+            self.spans = SpanRecorder() if spans else None
         self._qid = 0
         self._calls = 0
 
@@ -95,10 +126,12 @@ class Telemetry:
                     mode: str = "per_query") -> None:
         """Record one ``search_auto`` call: one trace per served query.
 
-        ``groups`` is ``[(band, realized, ids, result, wall_seconds)]``
-        as timed by the dispatch layer — ``result`` is already blocked
-        on, so pulling ``n_dist``/``n_expanded`` to the host is a copy,
-        not a sync inside anything compiled.
+        ``groups`` is ``[(band, realized, ids, result, stats,
+        wall_seconds)]`` as timed by the dispatch layer — ``result`` is
+        already blocked on, so pulling ``n_dist``/``n_expanded`` (and
+        the introspective ``TraversalStats``, when present) to the host
+        is a copy, not a sync inside anything compiled.  ``stats`` is
+        None on non-graph routes and when introspection is off.
         """
         if not self.enabled:
             return
@@ -117,12 +150,20 @@ class Telemetry:
         pred_cache: Dict[float, Dict[str, float]] = {}
 
         self.metrics.counter("jag_search_total").inc()
-        for gi, (band, realized, ids, res, wall_s) in enumerate(groups):
+        for gi, (band, realized, ids, res, stats, wall_s) in enumerate(groups):
             ids = np.asarray(ids).reshape(-1)
             size = max(int(ids.size), 1)
             per_us = float(wall_s) * 1e6 / size
             n_dist = np.asarray(res.n_dist).reshape(-1)
             n_exp = np.asarray(res.n_expanded).reshape(-1)
+            dead = sat = None
+            if stats is not None:
+                dead = np.asarray(stats.dead_ends).reshape(-1)
+                sat = np.asarray(stats.sat_step).reshape(-1)
+                self.metrics.counter("jag_introspect_query_total",
+                                     route=band).inc(size)
+                self.metrics.counter("jag_dead_end_total",
+                                     route=band).inc(int(dead.sum()))
             self.metrics.counter("jag_route_call_total", route=band).inc()
             self.metrics.counter("jag_route_query_total", route=band).inc(size)
             lat = self.metrics.histogram("jag_latency_us", route=band,
@@ -154,12 +195,62 @@ class Telemetry:
                     delta_n=delta_n, shard=shard, predicted=predicted,
                     cost_metric=metric, observed_us=per_us,
                     n_dist=int(n_dist[j]) if j < n_dist.size else 0,
-                    n_expanded=int(n_exp[j]) if j < n_exp.size else 0))
+                    n_expanded=int(n_exp[j]) if j < n_exp.size else 0,
+                    dead_ends=(int(dead[j]) if dead is not None
+                               and j < dead.size else None),
+                    sat_step=(int(sat[j]) if sat is not None
+                              and j < sat.size else None)))
                 self._qid += 1
 
         self._calls += 1
         if self.recal_every > 0 and self._calls % self.recal_every == 0:
             self.maybe_recalibrate(index)
+
+    # ---- shadow-oracle recall auditing ---------------------------------
+
+    def shadow_audit(self, index, queries, filt, result, plan, *,
+                     k: int) -> int:
+        """Audit the sampled fraction of one served call's queries.
+
+        Called by ``search_auto`` with the FINAL served result (after
+        any streaming delta merge), after ``record_call`` — so the qids
+        audited here are exactly the qids just traced.  Runs on the
+        host, off the serving critical path; returns the number of
+        queries audited (0 when shadow auditing is off or none sampled).
+        """
+        if not self.enabled or self.shadow is None:
+            return 0
+        sel = np.asarray(plan.selectivity, np.float64).reshape(-1)
+        B = int(sel.size)
+        realized = getattr(plan, "realized", None)
+        if realized is None:
+            realized = getattr(plan, "routes", None) or getattr(
+                plan, "route", "?")
+        routes = ([str(realized)] * B if isinstance(realized, str)
+                  else [str(r) for r in realized])
+        n = self.shadow.audit(
+            index, queries, filt, result, k=int(k),
+            qid0=max(self._qid - B, 0), routes=routes, sels=sel,
+            epoch=int(getattr(index, "epoch", 0)))
+        if n:
+            self.metrics.counter("jag_shadow_audit_total").inc(n)
+        return n
+
+    # ---- health ---------------------------------------------------------
+
+    def health_report(self, slo=None) -> dict:
+        """The fused pass/warn/fail SLO document over live serving state.
+
+        See ``repro.obs.health.health_report``; the drift threshold
+        defaults to this telemetry's.
+        """
+        from .health import HealthSLO, health_report
+        if slo is None:
+            slo = HealthSLO(drift_threshold=self.drift_threshold)
+        if self.shadow is not None:
+            self.shadow.flush()
+        shadow = list(self.shadow.records) if self.shadow is not None else ()
+        return health_report(self.traces.window(), shadow, slo)
 
     # ---- drift / re-calibration ----------------------------------------
 

@@ -46,6 +46,11 @@ class TraceRecord:
     observed_us: float       # wall-clock us for this query (group wall / size)
     n_dist: int              # distance computations (from SearchResult)
     n_expanded: int          # beam expansions (from SearchResult)
+    # traversal introspection (Telemetry(introspect=True), graph routes
+    # only) — None when the introspective variant didn't serve this query.
+    # Optional-with-default so pre-introspection JSONL dumps still load.
+    dead_ends: Optional[int] = None   # iterations with no filter-valid gain
+    sat_step: Optional[int] = None    # last beam-improving iteration (1-based)
 
 
 _FIELDS = tuple(f.name for f in fields(TraceRecord))
@@ -97,9 +102,19 @@ class TraceBuffer:
         self.dropped = 0
 
     def dump_jsonl(self, path: str) -> int:
-        """Write all buffered records as JSON-lines; returns the count."""
+        """Write all buffered records as JSON-lines; returns the count.
+
+        The first line is a meta header (``__trace_meta__``) carrying the
+        ring's ``capacity`` and ``dropped`` counter so a round-trip
+        through :func:`load_buffer` preserves them; :func:`load_jsonl`
+        (and any line-oriented consumer filtering on record keys) skips
+        it.
+        """
         n = 0
         with open(path, "w") as fh:
+            fh.write(json.dumps({"__trace_meta__": 1,
+                                 "capacity": self.capacity,
+                                 "dropped": self.dropped}) + "\n")
             for rec in self:
                 fh.write(json.dumps(asdict(rec)) + "\n")
                 n += 1
@@ -109,8 +124,10 @@ class TraceBuffer:
 def load_jsonl(path: str) -> List[TraceRecord]:
     """Load a ``dump_jsonl`` trace file back into records.
 
-    Unknown keys are ignored and missing keys error — the schema is the
-    dataclass, not the file.
+    Unknown keys are ignored and missing keys (beyond the dataclass's
+    optional tail) error — the schema is the dataclass, not the file.
+    Meta header lines are skipped; files dumped before the header
+    existed load unchanged.
     """
     out: List[TraceRecord] = []
     with open(path) as fh:
@@ -119,8 +136,34 @@ def load_jsonl(path: str) -> List[TraceRecord]:
             if not line:
                 continue
             raw = json.loads(line)
+            if "__trace_meta__" in raw:
+                continue
             out.append(TraceRecord(**{k: v for k, v in raw.items() if k in _FIELDS}))
     return out
 
 
-__all__ = ["TraceRecord", "TraceBuffer", "load_jsonl"]
+def load_buffer(path: str) -> TraceBuffer:
+    """Restore a :class:`TraceBuffer` from a ``dump_jsonl`` file.
+
+    Capacity and the ``dropped`` counter come from the meta header; a
+    headerless (pre-header) dump restores with capacity = record count
+    (minimum 1) and ``dropped = 0``.
+    """
+    capacity = None
+    dropped = 0
+    with open(path) as fh:
+        first = fh.readline().strip()
+    if first:
+        raw = json.loads(first)
+        if "__trace_meta__" in raw:
+            capacity = int(raw.get("capacity", 0)) or None
+            dropped = int(raw.get("dropped", 0))
+    records = load_jsonl(path)
+    buf = TraceBuffer(capacity or max(len(records), 1))
+    for rec in records:
+        buf.append(rec)
+    buf.dropped = dropped
+    return buf
+
+
+__all__ = ["TraceRecord", "TraceBuffer", "load_buffer", "load_jsonl"]

@@ -36,6 +36,7 @@ principle tile low-order float bits differently per batch size.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +65,7 @@ def route_descriptor(route: str, layout: str = "default",
 
 def run_route(executor, route: str, queries, filt, *, k: int,
               ls: int, max_iters: int, layout: str = "default",
-              dtype: str = "f32") -> SearchResult:
+              dtype: str = "f32", introspect: bool = False):
     """Execute one executor route by name with the serving options it takes.
 
     ``filt`` may be an atomic FilterBatch or a compound FilterExpr — both
@@ -72,16 +73,23 @@ def run_route(executor, route: str, queries, filt, *, k: int,
     ``layout``/``dtype`` select the graph route's serving variant; the
     prefilter scan is exact f32 by construction and the postfilter
     traversal runs the default layout, so both ignore them.
+
+    ``introspect=True`` changes the return to ``(result, stats)`` where
+    ``stats`` is the graph route's per-query ``TraversalStats`` (an extra
+    jit output of the introspective compilation) and None on the scan /
+    postfilter routes, which have no traversal to introspect.
     """
     if route == "prefilter":
-        return executor.prefilter(queries, filt, k=k)
+        res = executor.prefilter(queries, filt, k=k)
+        return (res, None) if introspect else res
     if route == "graph":
         return executor.graph(queries, filt, k=k, ls=ls,
                               max_iters=max_iters, layout=layout,
-                              dtype=dtype)
+                              dtype=dtype, introspect=introspect)
     if route == "postfilter":
-        return executor.postfilter(queries, filt, k=k, ls=ls,
-                                   max_iters=max_iters)
+        res = executor.postfilter(queries, filt, k=k, ls=ls,
+                                  max_iters=max_iters)
+        return (res, None) if introspect else res
     raise ValueError(f"unknown route {route!r}")
 
 
@@ -154,10 +162,22 @@ def regroup(parts, groups, batch: int) -> SearchResult:
                           for f in SearchResult._fields))
 
 
+def _span(spans, name: str, **args):
+    """``spans.span(...)`` when a recorder is attached, else a no-op.
+
+    Duck-typed so this module never imports ``repro.obs`` — any object
+    with a ``span(name, **args)`` context manager works.
+    """
+    if spans is None:
+        return nullcontext()
+    return spans.span(name, **args)
+
+
 def dispatch_per_query(executor, queries, filt,
                        pq: PerQueryPlan, *, k: int, ls: int, max_iters: int,
                        layout: str = "default", dtype: str = "f32",
-                       on_group=None) -> SearchResult:
+                       on_group=None, introspect: bool = False,
+                       spans=None) -> SearchResult:
     """Run each route group through its executor route; regroup per query.
 
     Each group's sub-batch shape keys its own executor compilation, so a
@@ -166,27 +186,42 @@ def dispatch_per_query(executor, queries, filt,
     ``FilterExpr.take`` (every leaf's lanes gathered in lockstep), so a
     group sees exactly its queries' filter lanes regardless of tree shape.
 
-    ``on_group(group, result, wall_seconds)`` is the telemetry tap: when
-    set, each group's route is blocked on (``jax.block_until_ready``) and
-    wall-timed on the host — timestamps never enter the compiled routes
-    (JAG006). Off (None), nothing blocks and dispatch is unchanged.
+    ``on_group(group, result, stats, wall_seconds)`` is the telemetry
+    tap: when set, each group's route is blocked on
+    (``jax.block_until_ready``) and wall-timed on the host — timestamps
+    never enter the compiled routes (JAG006). ``stats`` is the graph
+    route's per-query ``TraversalStats`` when ``introspect=True`` (None
+    otherwise). Off (None), nothing blocks and dispatch is unchanged.
+    ``spans`` is an optional ``repro.obs.SpanRecorder`` timing the
+    gather → execute → scatter stages (host-side, around the compiled
+    calls — never inside them).
     """
     q = jnp.asarray(queries)
 
     def _run(group, q_g, f_g):
-        if on_group is None:
-            return run_route(executor, group.route, q_g, f_g, k=k, ls=ls,
-                             max_iters=max_iters, layout=layout, dtype=dtype)
-        t0 = time.perf_counter()
-        res = jax.block_until_ready(
-            run_route(executor, group.route, q_g, f_g, k=k, ls=ls,
-                      max_iters=max_iters, layout=layout, dtype=dtype))
-        on_group(group, res, time.perf_counter() - t0)
-        return res
+        with _span(spans, f"execute:{group.route}",
+                   queries=int(np.shape(q_g)[0])):
+            if on_group is None:
+                out = run_route(executor, group.route, q_g, f_g, k=k,
+                                ls=ls, max_iters=max_iters, layout=layout,
+                                dtype=dtype, introspect=introspect)
+                return out[0] if introspect else out
+            t0 = time.perf_counter()
+            out = run_route(executor, group.route, q_g, f_g, k=k, ls=ls,
+                            max_iters=max_iters, layout=layout,
+                            dtype=dtype, introspect=introspect)
+            res, stats = out if introspect else (out, None)
+            res = jax.block_until_ready(res)
+            on_group(group, res, stats, time.perf_counter() - t0)
+            return res
 
     if len(pq.groups) == 1:      # no split -> no gather/scatter round-trip
         return _run(pq.groups[0], q, filt)
-    parts = [_run(g, jnp.take(q, jnp.asarray(g.ids), axis=0),
-                  filt.take(g.ids))
-             for g in pq.groups]
-    return regroup(parts, pq.groups, q.shape[0])
+    parts = []
+    for g in pq.groups:
+        with _span(spans, f"gather:{g.route}", queries=int(g.ids.size)):
+            q_g = jnp.take(q, jnp.asarray(g.ids), axis=0)
+            f_g = filt.take(g.ids)
+        parts.append(_run(g, q_g, f_g))
+    with _span(spans, "scatter", batch=int(q.shape[0])):
+        return regroup(parts, pq.groups, q.shape[0])

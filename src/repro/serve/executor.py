@@ -190,7 +190,14 @@ class Executor:
     # -- graph route (JAG traversal; Algorithm 2) --------------------------
     def graph(self, queries, filt, *, k: int, ls: int,
               max_iters: int, layout: str = "default",
-              dtype: str = "f32") -> SearchResult:
+              dtype: str = "f32", introspect: bool = False):
+        """JAG traversal. ``introspect=True`` compiles the introspective
+        variant (its own cache-key component — the standard program is
+        untouched) and returns ``(SearchResult, TraversalStats)`` with
+        per-query hops / frontier-saturation step / dead-end counters as
+        extra jit outputs: zero host callbacks, zero collectives, and
+        (ids, primary, secondary) bit-identical to the standard route.
+        """
         if layout not in LAYOUTS:
             raise ValueError(f"layout must be 'default' or 'fused', "
                              f"got {layout!r}")
@@ -198,6 +205,8 @@ class Executor:
             raise ValueError(f"dtype must be 'f32' or 'int8', got {dtype!r}")
         idx = self.index
         key = ("graph", layout, dtype, k, ls, max_iters, filt.kind)
+        if introspect:
+            key = key + ("introspect",)
         q = jnp.asarray(queries)
 
         if dtype == "f32" and layout == "default":
@@ -205,7 +214,8 @@ class Executor:
                 def run(graph, xb, xb_norm, attr, q, filt, entry):
                     return greedy_search(graph, xb, xb_norm, attr, q, entry,
                                          query_key_fn(filt), ls=ls, k=k,
-                                         max_iters=max_iters)
+                                         max_iters=max_iters,
+                                         introspect=introspect)
                 return run
             return self.run(key, make, idx.graph, idx.xb, idx.xb_norm,
                             idx.attr, q, filt, idx.entry)
@@ -218,7 +228,8 @@ class Executor:
                     return greedy_search(graph, xb, xb_norm, attr, q, entry,
                                          query_key_fn(filt), ls=ls, k=k,
                                          max_iters=max_iters,
-                                         fetch_fn=make_fetch_fn(lay))
+                                         fetch_fn=make_fetch_fn(lay),
+                                         introspect=introspect)
                 return run
             return self.run(key, make, idx.graph, idx.xb, idx.xb_norm,
                             idx.attr, lay, q, filt, idx.entry)
@@ -228,14 +239,17 @@ class Executor:
 
             def make():
                 def run(graph, xb, xb_norm, attr, lay, q, filt, entry):
-                    res = greedy_search(graph, xb, xb_norm, attr, q, entry,
+                    out = greedy_search(graph, xb, xb_norm, attr, q, entry,
                                         query_key_fn(filt), ls=ls, k=ls,
                                         max_iters=max_iters,
-                                        fetch_fn=make_fetch_fn(lay))
+                                        fetch_fn=make_fetch_fn(lay),
+                                        introspect=introspect)
+                    res, stats = out if introspect else (out, None)
                     i, p, s = rerank_exact(xb, xb_norm, res.ids,
                                            res.primary, q, k)
-                    return SearchResult(i, p, s, res.vlog, res.n_expanded,
-                                        res.n_dist)
+                    res = SearchResult(i, p, s, res.vlog, res.n_expanded,
+                                       res.n_dist)
+                    return (res, stats) if introspect else res
                 return run
             return self.run(key, make, idx.graph, idx.xb, idx.xb_norm,
                             idx.attr, lay, q, filt, idx.entry)
@@ -245,14 +259,16 @@ class Executor:
         def make():
             def run(graph, xq, xq_norm, scale, xb, xb_norm, attr, q, filt,
                     entry):
-                res = greedy_search(
+                out = greedy_search(
                     graph, xq, xq_norm, attr, q, entry,
                     query_key_fn(filt), ls=ls, k=ls, max_iters=max_iters,
-                    dist_fn=make_int8_dist_fn(scale))
+                    dist_fn=make_int8_dist_fn(scale), introspect=introspect)
+                res, stats = out if introspect else (out, None)
                 i, p, s = rerank_exact(xb, xb_norm, res.ids, res.primary,
                                        q, k)
-                return SearchResult(i, p, s, res.vlog, res.n_expanded,
-                                    res.n_dist)
+                res = SearchResult(i, p, s, res.vlog, res.n_expanded,
+                                   res.n_dist)
+                return (res, stats) if introspect else res
             return run
         return self.run(key, make, idx.graph, xq, xq_norm, scale, idx.xb,
                         idx.xb_norm, idx.attr, q, filt, idx.entry)

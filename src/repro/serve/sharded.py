@@ -193,10 +193,17 @@ class ShardedExecutor(Executor):
                              filt, k=k)
 
     def graph(self, queries, filt, *, k: int, ls: int, max_iters: int,
-              layout: str = "default", dtype: str = "f32") -> SearchResult:
+              layout: str = "default", dtype: str = "f32",
+              introspect: bool = False) -> SearchResult:
         """Sharded JAG traversal: each shard walks its own sub-graph from
         its own entry seeds; the exact merge keeps the k best of the S
         shard beams. Only the default f32 variant is sharded today."""
+        if introspect:
+            raise NotImplementedError(
+                "traversal introspection is single-device only — the "
+                "cross-shard merge would need per-shard stat reduction "
+                "(recorded follow-on); detach Telemetry(introspect=True) "
+                "before serving sharded")
         if (layout, dtype) != ("default", "f32"):
             raise NotImplementedError(
                 f"sharded graph route serves layout='default', dtype='f32' "

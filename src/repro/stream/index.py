@@ -309,8 +309,16 @@ class StreamingJAGIndex:
         return True
 
     # -- queries (base route + delta scan, merged exactly) -----------------
+    def _spans(self):
+        """The attached telemetry's span recorder, if any (host-side)."""
+        tel = self.telemetry
+        if tel is None or not tel.enabled:
+            return None
+        return getattr(tel, "spans", None)
+
     def _with_delta(self, base_res: SearchResult, queries,
                     filt, k: int) -> SearchResult:
+        from contextlib import nullcontext
         if self.telemetry is not None and self.telemetry.enabled:
             self.telemetry.on_search(delta_scanned=self.delta.n > 0)
         if self.delta.n == 0:
@@ -319,8 +327,12 @@ class StreamingJAGIndex:
         be = self.compaction_break_even(k)
         if be is not None:          # telemetry: predicted tax actually paid
             self.delta_tax_us += be[0] * int(np.shape(queries)[0])
-        extra = self.executor.delta(queries, filt, k=k)
-        return self.executor.merge(base_res, extra, k=k)
+        spans = self._spans()
+        with (spans.span("delta", rows=self.delta.n) if spans is not None
+              else nullcontext()):
+            extra = self.executor.delta(queries, filt, k=k)
+        with (spans.span("merge") if spans is not None else nullcontext()):
+            return self.executor.merge(base_res, extra, k=k)
 
     def search(self, queries, filt, k: int = 10, ls: int = 64,
                max_iters: int = 0, layout: str = "default") -> SearchResult:
@@ -372,6 +384,13 @@ class StreamingJAGIndex:
             else:
                 p = p._replace(realized=tuple(r + "+delta"
                                               for r in p.realized))
+        # shadow-oracle audit runs HERE, not in the delegated base call
+        # (which skips streaming indexes): the audited result must be the
+        # final served top-k over base + live delta rows
+        tel = self.telemetry
+        if (tel is not None and tel.enabled
+                and getattr(tel, "shadow", None) is not None):
+            tel.shadow_audit(self, queries, filt, res, p, k=k)
         return (res, p) if return_plan else res
 
     # -- persistence -------------------------------------------------------

@@ -347,13 +347,27 @@ def audit_report():
 
 
 def test_audit_covers_every_route(audit_report):
-    assert set(audit_report["routes"]) == {
-        "prefilter", "postfilter", "unfiltered", "delta", "merge",
-        "graph:default:f32", "graph:default:int8",
-        "graph:fused:f32", "graph:fused:int8"}
+    graph = {f"graph:{la}:{dt}" for la in ("default", "fused")
+             for dt in ("f32", "int8")}
+    assert set(audit_report["routes"]) == (
+        {"prefilter", "postfilter", "unfiltered", "delta", "merge"}
+        | graph | {g + ":introspect" for g in graph})
     # PR 9: the audited programs were captured WITH telemetry attached —
     # the zero-callback budgets below therefore prove tracing adds none
     assert audit_report["meta"]["telemetry"] is True
+
+
+def test_audit_introspective_routes_match_their_twins(audit_report):
+    # PR 10: the introspective compilation may add counters but must not
+    # add gathers, callbacks, or collectives relative to its twin route
+    routes = audit_report["routes"]
+    twins = [n for n in routes if n.endswith(":introspect")]
+    assert len(twins) == 4
+    for name in twins:
+        twin = routes[name.rsplit(":introspect", 1)[0]]
+        r = routes[name]
+        assert r["gathers_per_expansion"] == twin["gathers_per_expansion"]
+        assert r["callbacks"] == 0 and r["collectives"] == {}
 
 
 def test_audit_fused_routes_one_gather_per_expansion(audit_report):

@@ -3,13 +3,23 @@
 
 Usage:
     python tools/jagstat.py TRACES.jsonl [--drift-threshold X] [--json]
+    python tools/jagstat.py TRACES.jsonl --health [--shadow SHADOW.jsonl]
 
-One row per realized route: traffic share, latency percentiles
-(p50/p95/p99 us over per-query wall time), mean n_dist (the work/recall
-proxy), median predicted-vs-observed relative cost error, and drift
-status. The input is a ``TraceBuffer.dump_jsonl`` file (see
+Default mode prints one row per realized route: traffic share, latency
+percentiles (p50/p95/p99 us over per-query wall time), mean n_dist (the
+work/recall proxy), median predicted-vs-observed relative cost error,
+and drift status. The input is a ``TraceBuffer.dump_jsonl`` file (see
 ``repro.obs``; produce one with ``Telemetry().traces.dump_jsonl(path)``
 or ``benchmarks/obs_bench.py --traces PATH``).
+
+``--health`` instead renders the fused pass/warn/fail SLO document
+(``repro.obs.health``) over the trace window, optionally joined with a
+shadow-audit dump (``ShadowAuditor.dump_jsonl``) for the recall section.
+The exit code is 1 only when the overall status is ``fail``.
+
+Empty or truncated dumps are not errors: jagstat prints an explicit
+"no traces" line and exits 0, so log rotation racing a dump never turns
+into a paging incident.
 """
 import argparse
 import json
@@ -67,6 +77,23 @@ def render(rows):
                      for row in table)
 
 
+def run_health(records, args) -> int:
+    """``--health``: render the fused SLO document; exit 1 only on fail."""
+    from repro.obs import (HealthSLO, health_report, load_shadow_jsonl,
+                           render_health)
+    shadow = load_shadow_jsonl(args.shadow) if args.shadow else ()
+    slo = HealthSLO(recall=args.slo_recall,
+                    p99_us=args.slo_p99_us,
+                    drift_threshold=args.drift_threshold)
+    report = health_report(records, shadow, slo)
+    if args.json:
+        json.dump(report, sys.stdout, indent=1)
+        print()
+    else:
+        print(render_health(report))
+    return 1 if report["status"] == "fail" else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="per-route serving summary from a telemetry trace dump")
@@ -74,13 +101,25 @@ def main(argv=None) -> int:
     ap.add_argument("--drift-threshold", type=float, default=0.5,
                     help="median rel-err above this flags DRIFT (default .5)")
     ap.add_argument("--json", action="store_true",
-                    help="emit summary rows as JSON instead of a table")
+                    help="emit the summary (or health report) as JSON")
+    ap.add_argument("--health", action="store_true",
+                    help="render the pass/warn/fail serving health report")
+    ap.add_argument("--shadow", default=None, metavar="PATH",
+                    help="shadow-audit JSONL (ShadowAuditor.dump_jsonl) "
+                         "for the --health recall section")
+    ap.add_argument("--slo-recall", type=float, default=0.9,
+                    help="--health recall@k floor per cell (default .9)")
+    ap.add_argument("--slo-p99-us", type=float, default=None,
+                    help="--health per-route p99 latency bound in us "
+                         "(default: latency not judged)")
     args = ap.parse_args(argv)
 
-    records = load_jsonl(args.traces)
+    records = load_jsonl(args.traces) if os.path.exists(args.traces) else []
+    if args.health:
+        return run_health(records, args)
     if not records:
-        print(f"no trace records in {args.traces}", file=sys.stderr)
-        return 1
+        print(f"no traces: 0 records in {args.traces}")
+        return 0
     rows = summarize(records, args.drift_threshold)
     if args.json:
         json.dump(rows, sys.stdout, indent=1)
